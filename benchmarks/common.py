@@ -1,0 +1,135 @@
+"""Shared benchmark utilities: tiny-but-real training loops on CPU."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import PEFTConfig, get_config
+from repro.core import hfsl
+from repro.data.noniid import partition_by_classes
+from repro.data.pipeline import batches, cluster_batches
+from repro.data.synthetic import ClassificationTask
+from repro.models import model as M
+from repro.optim.optimizers import adamw
+from repro.core.peft import peft_value_and_grad
+from repro.optim.optimizers import apply_updates
+
+N_CLASSES = 5
+
+
+def edge_cfg(seed_head: bool = True):
+    """The paper's case-study backbone at benchmark scale.
+
+    vocab=64 keeps per-sample token statistics dense enough that the
+    synthetic 'flower' classes are separable from mean-pooled features
+    (vocab 512 + seq 64 is hopelessly sparse — measured)."""
+    cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    return cfg.with_(peft=dataclasses.replace(cfg.peft,
+                                              head_dim_out=N_CLASSES))
+
+
+def make_task(cfg, seq: int = 64, seed: int = 0) -> ClassificationTask:
+    return ClassificationTask(N_CLASSES, cfg.vocab_size, seq,
+                              class_strength=0.6, seed=seed)
+
+
+def pretrain(cfg, task, steps: int = 300, lr: float = 3e-3, seed: int = 0):
+    """LM pretraining on the class mixture (the 'cloud corpus')."""
+    params = M.init(cfg, jax.random.PRNGKey(seed))
+    opt = adamw(lr)
+    vg = peft_value_and_grad(M.lm_loss, trainable="all")
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, _), grads = vg(params, batch, cfg)
+        updates, state = opt.update(grads, state, params)
+        return apply_updates(params, updates), state, loss
+
+    it = task.pretrain_stream(16)
+    loss = None
+    for i in range(steps):
+        params, state, loss = step(params, state, next(it))
+    return params, float(loss)
+
+
+def eval_accuracy(params, cfg, data, batch_size: int = 32) -> float:
+    n, correct = 0, 0
+    logits_fn = jax.jit(lambda p, b: M.classify(p, b, cfg))
+    for lo in range(0, len(data["label"]), batch_size):
+        b = {k: jnp.asarray(v[lo:lo + batch_size]) for k, v in data.items()}
+        pred = np.argmax(np.asarray(logits_fn(params, b)), -1)
+        correct += int((pred == np.asarray(b["label"])).sum())
+        n += len(pred)
+    return correct / max(n, 1)
+
+
+def hfsl_finetune(params, cfg, task, *, n_clusters: int = 4,
+                  classes_per_client: int = N_CLASSES, epochs: int = 4,
+                  steps_per_epoch: int = 25, lr: float = 5e-3,
+                  sync_every: int = 5, n_train: int = 600,
+                  n_eval: int = 200, seed: int = 0,
+                  trainable: str = "adapters"):
+    """HFSL fine-tuning; returns (per-epoch accuracy, s/epoch, consensus)."""
+    train = task.dataset(n_train, seed=seed + 1)
+    evald = task.dataset(n_eval, seed=seed + 2)
+    parts = partition_by_classes(train["label"], n_clusters,
+                                 classes_per_client, seed=seed)
+    it = cluster_batches(train, parts, batch_size=16, seed=seed)
+    opt = adamw(lr)
+
+    if trainable == "all":
+        # full fine-tuning baseline (paper Fig 7): backbone unfrozen
+        def loss_fn(p, b, c):
+            return M.classify_loss(p, b, c)
+        state = {
+            "backbone": params["backbone"],
+            "adapters_c": jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_clusters, *x.shape)),
+                params["adapters"]),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        # full-FT optimizes backbone too -> emulate by single-cluster SGD
+        # over merged params (simplest faithful baseline)
+        opt_state = opt.init(params)
+        vg = peft_value_and_grad(M.classify_loss, trainable="all")
+
+        @jax.jit
+        def fstep(p, s, b):
+            (loss, aux), grads = vg(p, b, cfg)
+            updates, s = opt.update(grads, s, p)
+            return apply_updates(p, updates), s, loss
+
+        accs, times = [], []
+        flat_it = batches(train, 16, seed=seed)
+        p = params
+        for e in range(epochs):
+            t0 = time.time()
+            for _ in range(steps_per_epoch * n_clusters):
+                p, opt_state, loss = fstep(p, opt_state, next(flat_it))
+            times.append(time.time() - t0)
+            accs.append(eval_accuracy(p, cfg, evald))
+        return accs, times, p
+
+    state = hfsl.init_hfsl_state(jax.random.PRNGKey(seed), cfg, n_clusters,
+                                 opt, lambda c, k: params)
+    step = jax.jit(hfsl.make_hfsl_step(cfg, opt, M.classify_loss,
+                                       sync_every=sync_every))
+    accs, times = [], []
+    for e in range(epochs):
+        t0 = time.time()
+        for _ in range(steps_per_epoch):
+            state, metrics = step(state, next(it))
+        times.append(time.time() - t0)
+        accs.append(eval_accuracy(hfsl.consensus_params(state), cfg, evald))
+    return accs, times, hfsl.consensus_params(state)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

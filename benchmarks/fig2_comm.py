@@ -1,0 +1,37 @@
+"""Fig 2 reproduction: parameter-full vs parameter-efficient inference
+(model-distribution communication cost), for every assigned architecture.
+
+Uses the declared ParamSpec trees (no initialization), so full-size models
+are priced exactly.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.comm import CostModel
+from repro.launch.dryrun import ASSIGNED
+from repro.models.model import adapter_spec, backbone_spec
+from repro.sharding.rules import param_bytes
+
+
+def main() -> dict:
+    cm = CostModel()
+    out = {}
+    t0 = time.time()
+    for arch in ASSIGNED + ["vit-edge"]:
+        cfg = get_config(arch)
+        a = param_bytes(adapter_spec(cfg))
+        b = param_bytes(backbone_spec(cfg))
+        full_lat = cm.cs.latency(a + b)
+        eff_lat = cm.cs.latency(a)
+        out[arch] = (a, a + b, (a + b) / a)
+        emit(f"fig2_comm_{arch}", (time.time() - t0) * 1e6,
+             f"full_MB={(a+b)/1e6:.1f};efficient_MB={a/1e6:.2f};"
+             f"reduction={(a+b)/a:.0f}x;full_s={full_lat:.1f};eff_s={eff_lat:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Fig 6 reproduction: fine-tuning with pre-training vs without.
+
+Paper: pretrained FM reaches 96.8% at epoch 1 vs 57.0% converged from
+scratch. Here: LM-pretraining on the class-mixture corpus vs random init,
+both PEFT-fine-tuned identically.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import (edge_cfg, emit, eval_accuracy, hfsl_finetune,
+                               make_task, pretrain)
+from repro.models import model as M
+
+
+def main() -> dict:
+    cfg = edge_cfg()
+    task = make_task(cfg)
+    t0 = time.time()
+
+    pre_params, pre_loss = pretrain(cfg, task)
+    accs_pre, _, _ = hfsl_finetune(pre_params, cfg, task)
+
+    scratch = M.init(cfg, jax.random.PRNGKey(123))
+    accs_scratch, _, _ = hfsl_finetune(scratch, cfg, task)
+
+    dt = (time.time() - t0) * 1e6
+    emit("fig6_first_epoch_acc_pretrained", dt,
+         f"acc={accs_pre[0]:.3f}")
+    emit("fig6_final_acc_pretrained", dt, f"acc={accs_pre[-1]:.3f}")
+    emit("fig6_final_acc_scratch", dt, f"acc={accs_scratch[-1]:.3f}")
+    ok = accs_pre[0] > accs_scratch[-1] - 0.05 and accs_pre[-1] > accs_scratch[-1]
+    emit("fig6_pretraining_helps", dt, f"claim_holds={ok}")
+    return {"pre": accs_pre, "scratch": accs_scratch, "claim": ok}
+
+
+if __name__ == "__main__":
+    main()

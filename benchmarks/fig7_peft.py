@@ -1,0 +1,37 @@
+"""Fig 7 reproduction: parameter-efficient (frozen backbone) vs full FT.
+
+Paper: PEFT converges to higher accuracy in few-shot AND runs ~6x faster
+per epoch (35s vs 3m30s on their GPU). We measure both on the same data.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import edge_cfg, emit, hfsl_finetune, make_task, pretrain
+from repro.core.peft import trainable_fraction
+
+
+def main() -> dict:
+    cfg = edge_cfg()
+    task = make_task(cfg)
+    params, _ = pretrain(cfg, task)
+    frac = trainable_fraction(params)
+
+    t0 = time.time()
+    accs_peft, times_peft, _ = hfsl_finetune(params, cfg, task,
+                                             trainable="adapters")
+    accs_full, times_full, _ = hfsl_finetune(params, cfg, task,
+                                             trainable="all")
+    dt = (time.time() - t0) * 1e6
+    emit("fig7_acc_peft", dt, f"acc={accs_peft[-1]:.3f}")
+    emit("fig7_acc_full_ft", dt, f"acc={accs_full[-1]:.3f}")
+    emit("fig7_epoch_s_peft", sum(times_peft) / len(times_peft) * 1e6,
+         f"trainable_frac={frac:.4f}")
+    emit("fig7_epoch_s_full", sum(times_full) / len(times_full) * 1e6,
+         f"speedup={sum(times_full)/max(sum(times_peft),1e-9):.2f}x")
+    return {"peft": accs_peft, "full": accs_full,
+            "speedup": sum(times_full) / max(sum(times_peft), 1e-9)}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks (CPU wall-time of the XLA-blocked algorithms,
+plus derived achieved-GFLOP/s; the Pallas kernels' target perf is assessed
+structurally in the roofline, not by CPU timing)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.time() - t0) / iters * 1e6
+
+
+def main() -> dict:
+    key = jax.random.PRNGKey(0)
+    out = {}
+
+    B, S, H, D = 2, 1024, 8, 64
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(key, (B, S, H // 2, D), jnp.float32)
+    v = jax.random.normal(key, (B, S, H // 2, D), jnp.float32)
+    pos = jnp.arange(S)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, q_pos=pos, kv_pos=pos, backend="xla"))
+    us = _time(f, q, k, v)
+    flops = 4 * B * H * S * S * D
+    emit("kernel_flash_attention_1k", us, f"GFLOPs={flops/us/1e3:.1f}")
+    out["flash"] = us
+
+    Di, N = 512, 16
+    x = jax.random.normal(key, (B, S, Di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(key, (B, S, Di))) * 0.1
+    A = -jnp.exp(jax.random.normal(key, (Di, N)) * 0.3)
+    Bm = jax.random.normal(key, (B, S, N))
+    C = jax.random.normal(key, (B, S, N))
+    Dp = jnp.ones((Di,))
+    f = jax.jit(lambda *a: ops.selective_scan(*a, backend="xla"))
+    us = _time(f, x, dt, A, Bm, C, Dp)
+    emit("kernel_selective_scan_1k", us,
+         f"Melem_per_s={B*S*Di*N/us:.0f}")
+    out["sscan"] = us
+
+    W = 512
+    xg = jax.random.normal(key, (B, S, W))
+    rg = jax.random.normal(key, (B, S, W))
+    ig = jax.random.normal(key, (B, S, W))
+    ap = jax.random.normal(key, (W,))
+    f = jax.jit(lambda *a: ops.rglru(*a, backend="xla"))
+    us = _time(f, xg, rg, ig, ap)
+    emit("kernel_rglru_1k", us, f"Melem_per_s={B*S*W/us:.0f}")
+    out["rglru"] = us
+
+    M, K, Nn, r = 512, 1024, 1024, 8
+    x2 = jax.random.normal(key, (M, K))
+    w2 = jax.random.normal(key, (K, Nn)) * 0.02
+    a2 = jax.random.normal(key, (K, r)) * 0.02
+    b2 = jax.random.normal(key, (r, Nn)) * 0.02
+    f = jax.jit(lambda *a: ops.lora_matmul(*a, scale=2.0, backend="xla"))
+    us = _time(f, x2, w2, a2, b2)
+    emit("kernel_lora_matmul", us, f"GFLOPs={2*M*K*Nn/us/1e3:.1f}")
+    out["lora"] = us
+    return out
+
+
+if __name__ == "__main__":
+    main()

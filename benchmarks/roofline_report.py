@@ -1,0 +1,42 @@
+"""Roofline summary from dry-run artifacts (results/dryrun_*.json).
+
+Not a paper table — this is deliverable (g): per (arch x shape) roofline
+terms and bottleneck from the compiled 512-way SPMD modules.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+RESULTS = [
+    ("single_pod", "results/dryrun_single_pod.json"),
+    ("multi_pod", "results/dryrun_multi_pod.json"),
+]
+
+
+def main() -> dict:
+    out = {}
+    for tag, path in RESULTS:
+        if not os.path.exists(path):
+            emit(f"roofline_{tag}", 0.0, "missing (run launch/dryrun.py --all)")
+            continue
+        rows = json.load(open(path))
+        for r in rows:
+            if r.get("status") != "ok":
+                emit(f"roofline_{tag}_{r['arch']}_{r['shape']}", 0.0,
+                     r.get("status", "?"))
+                continue
+            rf = r["roofline"]
+            emit(f"roofline_{tag}_{r['arch']}_{r['shape']}",
+                 r.get("compile_s", 0) * 1e6,
+                 f"bottleneck={rf['bottleneck']};compute_s={rf['compute_s']:.4f};"
+                 f"memory_s={rf['memory_s']:.4f};collective_s={rf['collective_s']:.4f};"
+                 f"useful={rf['useful_ratio']:.3f}")
+            out[(tag, r["arch"], r["shape"])] = rf["bottleneck"]
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark driver — one entry per paper table/figure (+ kernels, roofline).
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig6,table5]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+ALL = ["table5_scheduler", "fig2_comm", "kernels_bench", "fig6_pretraining",
+       "fig7_peft", "table3_noniid", "table4_clusters", "roofline_report"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args()
+    mods = ALL if not args.only else [
+        m for m in ALL if any(m.startswith(p) for p in args.only.split(","))]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["main"])
+            mod.main()
+            print(f"bench_{name}_total,{(time.time()-t0)*1e6:.0f},ok")
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"bench_{name}_total,{(time.time()-t0)*1e6:.0f},"
+                  f"FAILED:{type(e).__name__}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

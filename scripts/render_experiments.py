@@ -1,0 +1,67 @@
+"""Render EXPERIMENTS.md roofline tables from results/dryrun_*.json."""
+import json
+import os
+import sys
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.0f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def table(path: str) -> str:
+    rows = json.load(open(path))
+    by = {(r["arch"], r["shape"]): r for r in rows}
+    archs = sorted({r["arch"] for r in rows})
+    out = ["| arch | shape | compute | memory | collective | bottleneck | "
+           "FLOPs/dev | bytes/dev | coll B/dev | useful | compile |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for a in archs:
+        for s in SHAPES:
+            r = by.get((a, s))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                out.append(f"| {a} | {s} | — | — | — | N/A (skip) "
+                           f"| — | — | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                out.append(f"| {a} | {s} | — | — | — | ERROR | — | — | — | — | — |")
+                continue
+            rf = r["roofline"]
+            out.append(
+                f"| {a} | {s} | {fmt_s(rf['compute_s'])} | "
+                f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+                f"**{rf['bottleneck']}** | {rf['flops_per_device']:.2e} | "
+                f"{rf['bytes_per_device']:.2e} | "
+                f"{rf['collective_bytes_per_device']:.2e} | "
+                f"{rf['useful_ratio']:.3f} | {r['compile_s']:.0f}s |")
+    return "\n".join(out)
+
+
+def memtable(path: str) -> str:
+    rows = json.load(open(path))
+    out = ["| arch | shape | args/dev | out/dev | temp/dev | peak/dev |",
+           "|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        m = r.get("memory_analysis", {})
+        gb = lambda k: f"{m.get(k, 0)/2**30:.2f}GB"
+        out.append(f"| {r['arch']} | {r['shape']} | "
+                   f"{gb('argument_size_in_bytes')} | {gb('output_size_in_bytes')} | "
+                   f"{gb('temp_size_in_bytes')} | {gb('peak_memory_in_bytes')} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
+    path = sys.argv[2]
+    print(table(path) if which == "roofline" else memtable(path))

@@ -1,0 +1,143 @@
+"""Pytree checkpointing (npz) + parameter-efficient (adapter-only) checkpoints.
+
+The adapter-only checkpoint is the storage/transport artifact of the paper's
+*parameter-efficient inference* (§III-A.2, Fig 2): distributing a fine-tuned
+model costs only the tunable modules' bytes, the frozen backbone being
+presumed synchronized out-of-band. `core/relay.py` uses these to meter the
+cloud-edge-end knowledge flows.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0][0:] or []:
+        key = _SEP.join(_part(p) for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            flat[key + ".bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(path: str, tree) -> int:
+    """Save a pytree of arrays. Returns bytes written."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    f = path if path.endswith(".npz") else path + ".npz"
+    return os.path.getsize(f)
+
+
+def load(path: str, like: Optional[Any] = None):
+    """Load into the structure of `like` (or a nested dict by key paths)."""
+    f = path if path.endswith(".npz") else path + ".npz"
+    raw = dict(np.load(f))
+    arrays = {}
+    for k, v in raw.items():
+        if k.endswith(".bf16"):
+            arrays[k[:-5]] = jnp.asarray(v.view(np.uint16)).view(jnp.bfloat16)
+        else:
+            arrays[k] = jnp.asarray(v)
+    if like is None:
+        out: dict = {}
+        for k, v in arrays.items():
+            node = out
+            parts = k.split(_SEP)
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = v
+        return out
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path, leaf in leaves_like:
+        key = _SEP.join(_part(p) for p in path)
+        assert key in arrays, f"missing {key} in checkpoint"
+        leaves.append(arrays[key].astype(leaf.dtype).reshape(leaf.shape))
+    return jax.tree.unflatten(jax.tree.structure(like), leaves)
+
+
+def save_adapters(path: str, params: dict) -> int:
+    """Adapter-only checkpoint: the parameter-efficient transport unit."""
+    return save(path, {"adapters": params["adapters"]})
+
+
+def load_adapters(path: str, params: dict) -> dict:
+    loaded = load(path, {"adapters": params["adapters"]})
+    return {**params, "adapters": loaded["adapters"]}
+
+
+def tree_bytes(tree) -> int:
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Quantized adapter transport (beyond-paper: D2D/CS links are the edge
+# bottleneck, so squeeze the tunable modules further — int8 symmetric
+# per-tensor-row quantization, ~2-4x over bf16/f32 adapters)
+# ---------------------------------------------------------------------------
+
+def _quantize(arr: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    a = np.asarray(arr, np.float32)
+    flat = a.reshape(a.shape[0], -1) if a.ndim > 1 else a.reshape(1, -1)
+    scale = np.abs(flat).max(axis=1, keepdims=True) / 127.0
+    scale = np.maximum(scale, 1e-12)
+    q = np.clip(np.round(flat / scale), -127, 127).astype(np.int8)
+    return q.reshape(a.shape if a.ndim > 1 else a.shape), \
+        scale.astype(np.float32)
+
+
+def save_adapters_quantized(path: str, params: dict) -> int:
+    """int8 adapter-only checkpoint. Returns bytes written."""
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = {}
+    for p, leaf in jax.tree_util.tree_flatten_with_path(
+            {"adapters": params["adapters"]})[0]:
+        key = _SEP.join(_part(x) for x in p)
+        arr = np.asarray(jax.device_get(leaf), np.float32)
+        q, scale = _quantize(arr)
+        flat[key + ".q8"] = q
+        flat[key + ".scale"] = scale
+        flat[key + ".dtype"] = np.frombuffer(
+            str(jnp.dtype(leaf.dtype)).encode().ljust(16), np.uint8).copy()
+    f = path if path.endswith(".npz") else path + ".npz"
+    np.savez(f, **flat)
+    return os.path.getsize(f)
+
+
+def load_adapters_quantized(path: str, params: dict) -> dict:
+    f = path if path.endswith(".npz") else path + ".npz"
+    raw = dict(np.load(f))
+    leaves_like, _ = jax.tree_util.tree_flatten_with_path(
+        {"adapters": params["adapters"]})
+    out = []
+    for p, leaf in leaves_like:
+        key = _SEP.join(_part(x) for x in p)
+        q = raw[key + ".q8"].astype(np.float32)
+        scale = raw[key + ".scale"]
+        flat = q.reshape(q.shape[0], -1) if q.ndim > 1 else q.reshape(1, -1)
+        deq = (flat * scale).reshape(leaf.shape)
+        out.append(jnp.asarray(deq).astype(leaf.dtype))
+    tree = jax.tree.unflatten(
+        jax.tree.structure({"adapters": params["adapters"]}), out)
+    return {**params, "adapters": tree["adapters"]}

@@ -1,0 +1,98 @@
+"""Communication / energy / latency cost model (paper §III-C.2, §III-D.2).
+
+The paper enumerates six metrics for its workflows but never prices them;
+this module does, for both the wireless topology the paper assumes (D2D +
+client-server links, 6G-ish defaults) and the TPU ICI topology the
+production system runs on. All byte counts come from real pytrees or SL
+traces — nothing hardcoded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.sl_pipeline import SLTrace
+
+# v5e constants (per spec)
+TPU_PEAK_FLOPS = 197e12        # bf16 / chip
+TPU_HBM_BW = 819e9             # B/s
+TPU_ICI_BW = 50e9              # B/s per link
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """One link class: rate (B/s) + energy per byte (J/B)."""
+    rate: float
+    energy_per_byte: float
+
+    def latency(self, nbytes: float) -> float:
+        return nbytes / self.rate
+
+    def energy(self, nbytes: float) -> float:
+        return nbytes * self.energy_per_byte
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Topology prices. Defaults: 6G-ish wireless edge (paper's world)."""
+    d2d: LinkModel = LinkModel(rate=250e6 / 8, energy_per_byte=40e-9)
+    cs: LinkModel = LinkModel(rate=100e6 / 8, energy_per_byte=80e-9)   # client<->server
+    backhaul: LinkModel = LinkModel(rate=10e9 / 8, energy_per_byte=5e-9)
+    client_flops: float = 10e12            # edge-device peak (RTX4060-ish)
+    client_joules_per_flop: float = 2e-11
+
+    @staticmethod
+    def tpu() -> "CostModel":
+        return CostModel(
+            d2d=LinkModel(TPU_ICI_BW, 1e-10),
+            cs=LinkModel(TPU_ICI_BW, 1e-10),
+            backhaul=LinkModel(4 * TPU_ICI_BW, 1e-10),
+            client_flops=TPU_PEAK_FLOPS,
+            client_joules_per_flop=1e-12,
+        )
+
+
+@dataclasses.dataclass
+class RoundCost:
+    """The paper's metric set for one fine-tuning round / inference request."""
+    latency_s: float
+    compute_flops: float
+    energy_j: float
+    comm_bytes: int
+    memory_bytes: int
+
+    def __add__(self, o: "RoundCost") -> "RoundCost":
+        return RoundCost(self.latency_s + o.latency_s,
+                         self.compute_flops + o.compute_flops,
+                         self.energy_j + o.energy_j,
+                         self.comm_bytes + o.comm_bytes,
+                         max(self.memory_bytes, o.memory_bytes))
+
+
+def sl_round_cost(trace: SLTrace, cm: CostModel, *,
+                  model_delivery_bytes: int = 0,
+                  upload_bytes: int = 0) -> RoundCost:
+    """Cost of one SL pass (fine-tuning if trace.gradient_bytes > 0).
+
+    Serial chain: compute latencies add up (the paper's serial D2D relay);
+    each hop pays D2D latency; delivery/upload pay CS latency.
+    """
+    compute_lat = sum(f / cm.client_flops for f in trace.per_client_flops)
+    d2d_bytes = trace.smashed_bytes + trace.gradient_bytes + trace.feedback_bytes
+    comm_lat = cm.d2d.latency(d2d_bytes) \
+        + cm.cs.latency(model_delivery_bytes + upload_bytes)
+    flops = float(sum(trace.per_client_flops))
+    energy = flops * cm.client_joules_per_flop + cm.d2d.energy(d2d_bytes) \
+        + cm.cs.energy(model_delivery_bytes + upload_bytes)
+    return RoundCost(
+        latency_s=compute_lat + comm_lat,
+        compute_flops=flops,
+        energy_j=energy,
+        comm_bytes=d2d_bytes + model_delivery_bytes + upload_bytes,
+        memory_bytes=trace.peak_activation_bytes,
+    )
+
+
+def transfer_cost(nbytes: int, link: LinkModel) -> RoundCost:
+    return RoundCost(link.latency(nbytes), 0.0, link.energy(nbytes),
+                     nbytes, 0)

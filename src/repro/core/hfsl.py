@@ -1,0 +1,172 @@
+"""Hybrid Federated Split Learning trainer (paper §III-C, Fig 4).
+
+The paper's fine-tuning workflow maps onto the TPU mesh as (DESIGN.md §2):
+
+- **FL inter-cluster parallelism**: every index along the (`pod`, `data`)
+  mesh axes is one fine-tuning client cluster. The tunable adapters carry a
+  leading ``cluster`` dim (sharded over those axes), so each cluster trains
+  its *own* adapter replica on its *own* data shard — zero cross-cluster
+  traffic during local steps. The frozen backbone is shared (FSDP-sharded).
+- **FedAvg sync**: every ``sync_every`` steps the adapter replicas are
+  averaged over the cluster dim (one all-reduce of adapter-sized bytes —
+  the paper's "uploading and aggregation of end model"). Optimizer state
+  stays cluster-local, as in standard FedAvg.
+- **SL intra-cluster seriality** becomes tensor parallelism over `model`
+  inside each cluster for production (see core/sl_pipeline.py for the
+  faithful serial form).
+
+With ``sync_every=1`` this degenerates to synchronous data-parallel PEFT;
+with one cluster it degenerates to SL, matching §III-C.1's remark.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
+from repro.sharding.rules import ParamSpec, shard
+
+
+# ---------------------------------------------------------------------------
+# Specs / init
+# ---------------------------------------------------------------------------
+
+def _cluster_stack(tree, n: int):
+    """Leading `cluster` dim on every adapter ParamSpec.
+
+    Inner `fsdp` axes are dropped: `cluster` already consumes the
+    (pod, data) mesh axes, and a spec may not map a mesh axis twice.
+    """
+    def f(s: ParamSpec) -> ParamSpec:
+        inner = tuple(None if a == "fsdp" else a for a in s.axes) if s.axes \
+            else tuple([None] * len(s.shape))
+        return ParamSpec((n, *s.shape), s.dtype, ("cluster", *inner),
+                         init=s.init, scale=s.scale)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def hfsl_state_spec(cfg, n_clusters: int, optimizer: Optimizer,
+                    model_spec_fn: Callable) -> dict:
+    """ParamSpec tree of the full HFSL train state (dry-run compatible).
+
+    Optimizer state is declared by structural analogy: AdamW keeps two f32
+    moments per adapter leaf (+ step), SGD keeps zero or one.
+    """
+    ms = model_spec_fn(cfg)
+    adapters_c = _cluster_stack(ms["adapters"], n_clusters)
+
+    def f32_like(s: ParamSpec) -> ParamSpec:
+        return ParamSpec(s.shape, jnp.float32, s.axes, init="zeros")
+
+    opt = {
+        "step": ParamSpec((n_clusters,), jnp.int32, ("cluster",), init="zeros"),
+        "m": jax.tree.map(f32_like, adapters_c,
+                          is_leaf=lambda x: isinstance(x, ParamSpec)),
+        "v": jax.tree.map(f32_like, adapters_c,
+                          is_leaf=lambda x: isinstance(x, ParamSpec)),
+    }
+    return {
+        "backbone": ms["backbone"],
+        "adapters_c": adapters_c,
+        "opt": opt,
+        "step": ParamSpec((), jnp.int32, (), init="zeros"),
+    }
+
+
+def init_hfsl_state(key: jax.Array, cfg, n_clusters: int,
+                    optimizer: Optimizer, model_init_fn: Callable) -> dict:
+    params = model_init_fn(cfg, key)
+    adapters_c = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_clusters, *x.shape)),
+        params["adapters"])
+    # cluster replicas start identical (edge model delivery, Fig 4 step 1)
+    return {
+        "backbone": params["backbone"],
+        "adapters_c": adapters_c,
+        "opt": jax.vmap(optimizer.init)(adapters_c),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def fedavg(adapters_c):
+    """FedAvg over the cluster dim: mean, broadcast back to every cluster."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(
+            jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True),
+            x.shape).astype(x.dtype),
+        adapters_c)
+
+
+def make_hfsl_step(cfg, optimizer: Optimizer, loss_fn: Callable, *,
+                   sync_every: int = 1, clip_norm: float = 0.0,
+                   always_sync: bool = False) -> Callable:
+    """Build the jittable HFSL train step.
+
+    loss_fn(params, batch, cfg) -> (loss, aux). Batch leaves carry a leading
+    cluster dim (see data/pipeline.cluster_batches).
+    """
+
+    def one_cluster(backbone, adapters, opt_state, batch):
+        def inner(a):
+            loss, aux = loss_fn({"backbone": backbone, "adapters": a},
+                                batch, cfg)
+            return loss, aux
+
+        (loss, aux), grads = jax.value_and_grad(inner, has_aux=True)(adapters)
+        if clip_norm:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, adapters)
+        adapters = apply_updates(adapters, updates)
+        return adapters, opt_state, loss, aux
+
+    def step(state: dict, batch: dict) -> tuple[dict, dict]:
+        adapters_c, opt_c, loss_c, aux_c = jax.vmap(
+            one_cluster, in_axes=(None, 0, 0, 0))(
+            state["backbone"], state["adapters_c"], state["opt"], batch)
+        new_step = state["step"] + 1
+        if always_sync or sync_every == 1:
+            adapters_c = fedavg(adapters_c)
+        else:
+            do_sync = (new_step % sync_every) == 0
+            synced = fedavg(adapters_c)
+            adapters_c = jax.tree.map(
+                lambda s, a: jnp.where(do_sync, s, a), synced, adapters_c)
+        metrics = {"loss": jnp.mean(loss_c), "loss_per_cluster": loss_c}
+        for k in (aux_c or {}):
+            metrics[k] = jnp.mean(aux_c[k])
+        return {**state, "adapters_c": adapters_c, "opt": opt_c,
+                "step": new_step}, metrics
+
+    return step
+
+
+def consensus_params(state: dict) -> dict:
+    """Aggregated model (edge view after FedAvg): cluster-mean adapters."""
+    return {"backbone": state["backbone"],
+            "adapters": jax.tree.map(
+                lambda x: jnp.mean(x.astype(jnp.float32), 0).astype(x.dtype),
+                state["adapters_c"])}
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting (per §III-C.2)
+# ---------------------------------------------------------------------------
+
+def sync_bytes(adapters_c) -> int:
+    """Bytes moved per FedAvg round: each cluster uploads + downloads its
+    adapter replica (the parameter-efficient flow; compare a full-model
+    FedAvg in benchmarks/fig2_comm.py)."""
+    import numpy as np
+    one = jax.tree.map(lambda x: x[0], adapters_c)
+    per_replica = sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                      for x in jax.tree.leaves(one))
+    n = jax.tree.leaves(adapters_c)[0].shape[0]
+    return 2 * n * per_replica

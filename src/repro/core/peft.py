@@ -1,0 +1,100 @@
+"""Parameter-efficient fine-tuning mechanics (paper §III-A.1).
+
+The model API (models/model.py) already splits params into ``backbone`` /
+``adapters``. This module provides the training-side mechanics around that
+split:
+
+- gradients and optimizer state exist *only* for the adapter subtree
+  (``peft_value_and_grad``), the backbone being closed over as a constant —
+  no backbone grads are ever materialized;
+- full fine-tuning is the same entry point with ``trainable='all'`` (the
+  paper's Fig 7 baseline);
+- accounting helpers report trainable fraction and transport bytes (feeding
+  the §III-A.2 parameter-efficient-inference ledger in core/comm.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Trainable = Literal["adapters", "all", "backbone"]
+
+
+def split(params: dict, trainable: Trainable = "adapters") -> tuple[dict, dict]:
+    """-> (trainable_subtree, frozen_subtree)."""
+    if trainable == "adapters":
+        return {"adapters": params["adapters"]}, {"backbone": params["backbone"]}
+    if trainable == "backbone":
+        return {"backbone": params["backbone"]}, {"adapters": params["adapters"]}
+    return params, {}
+
+
+def merge(trainable: dict, frozen: dict) -> dict:
+    return {**frozen, **trainable}
+
+
+def peft_value_and_grad(loss_fn: Callable, trainable: Trainable = "adapters",
+                        has_aux: bool = True) -> Callable:
+    """value_and_grad over the trainable subtree only.
+
+    loss_fn(params, *args) -> loss | (loss, aux).
+    Returned fn(params, *args) -> ((loss, aux), grads_subtree).
+    """
+    def wrapped(params: dict, *args):
+        t, f = split(params, trainable)
+
+        def inner(t_, *a):
+            return loss_fn(merge(t_, f), *a)
+
+        return jax.value_and_grad(inner, has_aux=has_aux)(t, *args)
+
+    return wrapped
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def trainable_fraction(params: dict) -> float:
+    """The paper's '<1% of model parameters' claim, measured."""
+    a = count_params(params.get("adapters", {}))
+    b = count_params(params.get("backbone", {}))
+    return a / max(a + b, 1)
+
+
+def merge_lora_into_backbone(params: dict, cfg) -> dict:
+    """Bake LoRA deltas into frozen weights (deploy-time optimization).
+
+    W' = W + scale * A @ B per target projection. Leaves prefix/state
+    prompts untouched (they are runtime inputs, not weight deltas).
+    Works on the stacked (L, ...) layout via einsum over the layer dim.
+    """
+    import copy
+    out = jax.tree.map(lambda x: x, params)      # shallow-ish copy
+    scale = cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1)
+    stack = out["adapters"].get("stack", {})
+    name_map = {"q": "wq", "k": "wk", "v": "wv", "o": "wo"}
+    for gname, group in stack.items():
+        for sname, sub in group.items():
+            lora = sub.get("lora")
+            if not lora:
+                continue
+            tgt = out["backbone"]["layers"][gname][sname]
+            blk = tgt.get("attn", tgt.get("mix"))
+            for t, ab in lora.items():
+                w = blk[name_map[t]]
+                delta = scale * jnp.einsum("lkr,lrn->lkn",
+                                           ab["a"].astype(jnp.float32),
+                                           ab["b"].astype(jnp.float32))
+                blk[name_map[t]] = (w.astype(jnp.float32) + delta).astype(w.dtype)
+                ab["b"] = jnp.zeros_like(ab["b"])   # disarm runtime branch
+    return out

@@ -1,0 +1,102 @@
+"""Data-free knowledge relay (paper §III-B, Fig 3).
+
+The edge server is the buffer between GAI (cloud FM) and EI (end clusters):
+
+- **cloud-edge subnetwork** (domain-across flow): the cloud delivers
+  foundation adapters to each domain's edge model; edges upload their
+  fine-tuned adapters; the cloud FedAvg-aggregates across domains.
+- **edge-end subnetwork** (domain-specific flow): each edge delivers its
+  domain adapters to its client clusters (HFSL handles the intra-domain
+  training; see core/hfsl.py) and absorbs the aggregated result.
+
+"Data-free" is structural: only adapter pytrees ever cross a tier boundary
+— never tokens, activations, or labels. Every transfer is metered in bytes
+(parameter-efficient vs parameter-full, §III-A.2) through core/comm.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import CostModel, RoundCost, transfer_cost
+from repro.core.peft import tree_bytes
+
+
+@dataclasses.dataclass
+class Ledger:
+    cloud_to_edge: int = 0
+    edge_to_cloud: int = 0
+    edge_to_end: int = 0
+    end_to_edge: int = 0
+    transfers: int = 0
+
+    def total(self) -> int:
+        return (self.cloud_to_edge + self.edge_to_cloud
+                + self.edge_to_end + self.end_to_edge)
+
+
+def _avg(trees: list) -> dict:
+    return jax.tree.map(
+        lambda *xs: (sum(x.astype(jnp.float32) for x in xs)
+                     / len(xs)).astype(xs[0].dtype), *trees)
+
+
+class KnowledgeRelay:
+    """Versioned adapter store for one cloud + N domain edges."""
+
+    def __init__(self, cloud_adapters: dict, domains: list[str],
+                 cost_model: Optional[CostModel] = None):
+        self.cloud = cloud_adapters
+        self.cloud_version = 0
+        self.edges = {d: jax.tree.map(lambda x: x, cloud_adapters)
+                      for d in domains}
+        self.edge_versions = {d: 0 for d in domains}
+        self.ledger = Ledger()
+        self.cm = cost_model or CostModel()
+        self.cost = RoundCost(0, 0, 0, 0, 0)
+
+    # -- cloud-edge subnetwork (domain-across, large-scale flow) ----------
+    def cloud_deliver(self, domain: str) -> dict:
+        """Cloud FM -> edge domain model (model delivery)."""
+        nb = tree_bytes(self.cloud)
+        self.ledger.cloud_to_edge += nb
+        self.ledger.transfers += 1
+        self.cost = self.cost + transfer_cost(nb, self.cm.backhaul)
+        self.edges[domain] = jax.tree.map(lambda x: x, self.cloud)
+        self.edge_versions[domain] = self.cloud_version
+        return self.edges[domain]
+
+    def cloud_aggregate(self, domains: Optional[list[str]] = None) -> dict:
+        """Edges -> cloud: FedAvg over domain adapters (upload + aggregate)."""
+        ds = domains or list(self.edges)
+        for d in ds:
+            nb = tree_bytes(self.edges[d])
+            self.ledger.edge_to_cloud += nb
+            self.ledger.transfers += 1
+            self.cost = self.cost + transfer_cost(nb, self.cm.backhaul)
+        self.cloud = _avg([self.edges[d] for d in ds])
+        self.cloud_version += 1
+        return self.cloud
+
+    # -- edge-end subnetwork (domain-specific, small-scale flow) ----------
+    def edge_deliver(self, domain: str, n_clusters: int) -> dict:
+        """Edge -> clusters (segmentation & distribution, Fig 4 step 1)."""
+        nb = tree_bytes(self.edges[domain]) * n_clusters
+        self.ledger.edge_to_end += nb
+        self.ledger.transfers += n_clusters
+        self.cost = self.cost + transfer_cost(nb, self.cm.cs)
+        return self.edges[domain]
+
+    def edge_absorb(self, domain: str, cluster_adapters: list) -> dict:
+        """Clusters -> edge: FedAvg (uploading & aggregation, Fig 4 step 4)."""
+        for a in cluster_adapters:
+            nb = tree_bytes(a)
+            self.ledger.end_to_edge += nb
+            self.ledger.transfers += 1
+            self.cost = self.cost + transfer_cost(nb, self.cm.cs)
+        self.edges[domain] = _avg(cluster_adapters)
+        self.edge_versions[domain] += 1
+        return self.edges[domain]

@@ -1,0 +1,36 @@
+"""Batching pipeline over in-memory datasets (per-cluster shards)."""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def batches(data: dict, batch_size: int, *, shuffle: bool = True,
+            seed: int = 0, drop_last: bool = True,
+            epochs: Optional[int] = None) -> Iterator[dict]:
+    """Yield dict batches from a dict of equal-length arrays."""
+    n = len(next(iter(data.values())))
+    rng = np.random.default_rng(seed)
+    epoch = 0
+    while epochs is None or epoch < epochs:
+        order = rng.permutation(n) if shuffle else np.arange(n)
+        stop = (n // batch_size) * batch_size if drop_last else n
+        for lo in range(0, stop, batch_size):
+            idx = order[lo:lo + batch_size]
+            yield {k: jnp.asarray(v[idx]) for k, v in data.items()}
+        epoch += 1
+
+
+def cluster_batches(data: dict, parts: Sequence[np.ndarray], batch_size: int,
+                    *, seed: int = 0) -> Iterator[dict]:
+    """Stacked per-cluster batches: leaves get a leading cluster dim.
+
+    Used by core/hfsl.py — cluster c trains on parts[c] only (the paper's
+    'personalized local data stays in its cluster')."""
+    its = [batches({k: v[p] for k, v in data.items()}, batch_size,
+                   seed=seed + i) for i, p in enumerate(parts)]
+    while True:
+        bs = [next(it) for it in its]
+        yield {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}

@@ -1,0 +1,389 @@
+"""Kernel dispatch layer.
+
+Every hot-spot op has three interchangeable implementations:
+
+- ``xla``       — pure-jnp *blocked* algorithm (same tiling/online-softmax
+                  structure as the Pallas kernel). This is what the 512-way
+                  CPU dry-run lowers, so the roofline reflects the intended
+                  kernel structure (Mosaic only lowers on real TPUs).
+- ``pallas``    — the TPU-target ``pl.pallas_call`` kernel.
+- ``interpret`` — the same Pallas kernel with ``interpret=True`` (CPU
+                  correctness path used by tests).
+
+Select globally with :func:`set_backend` or per-call with ``backend=``.
+"""
+from __future__ import annotations
+
+import contextlib
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+_BACKEND = "xla"
+NEG_INF = -1e30
+_FLASH_BQ, _FLASH_BKV = 512, 1024     # default tiles; perf knob below
+
+
+def set_flash_blocks(bq: int, bkv: int) -> None:
+    """Perf knob (EXPERIMENTS.md §Perf): flash attention tile sizes."""
+    global _FLASH_BQ, _FLASH_BKV
+    _FLASH_BQ, _FLASH_BKV = bq, bkv
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    assert name in ("xla", "pallas", "interpret"), name
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def _pick(b: Optional[str]) -> str:
+    return b or _BACKEND
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (GQA + prefix-KV + sliding window, position-based masking)
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    q_pos: jax.Array, kv_pos: jax.Array,
+                    window: int = 0, causal: bool = True,
+                    scale: Optional[float] = None,
+                    block_q: Optional[int] = None,
+                    block_kv: Optional[int] = None,
+                    backend: Optional[str] = None) -> jax.Array:
+    """Blocked online-softmax attention. Shapes as in :func:`ref.attention`."""
+    block_q = block_q or _FLASH_BQ
+    block_kv = block_kv or _FLASH_BKV
+    impl = _pick(backend)
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import flash_attention as fk
+        return fk.flash_attention_pallas(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, window=window, causal=causal,
+            scale=scale, block_q=block_q, block_kv=block_kv,
+            interpret=(impl == "interpret"))
+    return _flash_xla(q, k, v, q_pos=q_pos, kv_pos=kv_pos, window=window,
+                      causal=causal, scale=scale, block_q=block_q,
+                      block_kv=block_kv)
+
+
+def _flash_xla(q, k, v, *, q_pos, kv_pos, window, causal, scale,
+               block_q, block_kv):
+    """Blocked online-softmax attention, head-flat layout.
+
+    GQA KV heads are repeated up to the full head count before blocking so
+    every block tensor carries one `heads` dim — under tensor parallelism
+    each device then holds exactly its heads' K/V slice (the standard TP
+    layout; without this GSPMD invents pathological shardings for the
+    (Hkv, group) split dims). Explicit constraints keep the scan carry
+    head-sharded.
+    """
+    from repro.sharding.rules import shard
+
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bq, bkv = min(block_q, S), min(block_kv, T)
+
+    if g > 1:                                  # head-flat GQA (TP layout)
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = shard(k, "batch", "attn_seq", "heads", "head_dim")
+    v = shard(v, "batch", "attn_seq", "heads", "head_dim")
+
+    qp = _pad_to(q, 1, bq)
+    q_posp = _pad_to(q_pos, 0, bq, value=-(10 ** 9))      # padded q rows see nothing
+    kp = _pad_to(k, 1, bkv)
+    vp = _pad_to(v, 1, bkv)
+    kv_posp = _pad_to(kv_pos, 0, bkv, value=10 ** 9)      # padded kv never visible
+    Sp, Tp = qp.shape[1], kp.shape[1]
+    nq, nk = Sp // bq, Tp // bkv
+
+    qb = qp.reshape(B, nq, bq, Hq, D).astype(jnp.float32)
+    qb = shard(qb, "batch", None, None, "heads", "head_dim")
+    qpb = q_posp.reshape(nq, bq)
+    kb = jnp.moveaxis(kp.reshape(B, nk, bkv, Hq, D), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nk, bkv, Hq, D), 1, 0)
+    kvb = kv_posp.reshape(nk, bkv)
+
+    def blk_step(qi, qpi, carry, blk):
+        """One (q block, kv block) online-softmax update."""
+        acc, m, l = carry
+        kj, vj, kvp = blk
+        kj = shard(kj, "batch", None, "heads", "head_dim")
+        vj = shard(vj, "batch", None, "heads", "head_dim")
+        s = jnp.einsum("bsnd,btnd->bnst", qi, kj.astype(jnp.float32)) * scale
+        qpos = qpi[None, None, :, None]
+        kpos = kvp[None, None, None, :]
+        vis = (kpos <= qpos) if causal else (kpos < 10 ** 8)  # mask padding
+        if window and window > 0:
+            vis = vis & ((qpos - kpos) < window)
+        vis = vis | (kpos < 0)
+        s = jnp.where(vis, s, NEG_INF)
+        s = shard(s, "batch", "heads", None, None)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bnst,btnd->bnsd", p, vj.astype(jnp.float32))
+        acc_new = shard(acc_new, "batch", "heads", None, "head_dim")
+        return acc_new, m_new, l_new
+
+    # Block pruning (EXPERIMENTS.md §Perf iter q2): a causal q block only
+    # touches kv blocks covering positions <= its last row; a sliding-window
+    # block additionally skips blocks older than the window. Prefix slots
+    # occupy the first ceil(n_p/bkv) blocks and are never pruned. This cuts
+    # score traffic/FLOPs ~2x for causal training and ~S/window for long
+    # sliding prefill versus the dense nq x nk sweep.
+    # static prefix length from shapes: kv rows = n_prefix + S for
+    # (prefix-tuned) self-attention; cross-attention is non-causal.
+    n_prefix = max(T - S, 0) if causal else 0
+
+    outs = []
+    for i in range(nq):
+        qi = qb[:, i]
+        qpi = qpb[i]
+        if causal:
+            hi = n_prefix + min((i + 1) * bq, Sp)          # last visible kv row
+            j_hi = min((hi + bkv - 1) // bkv, nk)
+            j_lo = 0
+            if window and window > 0:
+                lo = n_prefix + max(i * bq - window + 1, 0)
+                j_lo = max(lo // bkv, 0)
+        else:
+            j_lo, j_hi = 0, nk
+        acc = jnp.zeros((B, Hq, bq, D), jnp.float32)
+        m = jnp.full((B, Hq, bq), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, Hq, bq), jnp.float32)
+        acc = shard(acc, "batch", "heads", None, "head_dim")
+        if causal and window and window > 0 and j_lo > 0 and n_prefix > 0:
+            # prefix blocks are below j_lo but always visible: visit block 0..
+            pre_hi = (n_prefix + bkv - 1) // bkv
+            for j in range(0, min(pre_hi, j_lo)):
+                acc, m, l = blk_step(qi, qpi, (acc, m, l),
+                                     (kb[j], vb[j], kvb[j]))
+        if j_hi > j_lo:
+            (acc, m, l), _ = jax.lax.scan(
+                lambda c, blk: (blk_step(qi, qpi, c, blk), None),
+                (acc, m, l), (kb[j_lo:j_hi], vb[j_lo:j_hi], kvb[j_lo:j_hi]))
+        out_i = acc / jnp.maximum(l[..., None], 1e-30)     # (B, Hq, bq, D)
+        outs.append(out_i.transpose(0, 2, 1, 3))           # (B, bq, Hq, D)
+    out = jnp.concatenate(outs, axis=1)
+    return out[:, :S].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Selective scan (Mamba-1)
+# ---------------------------------------------------------------------------
+
+_SSM_XLA_IMPL = "assoc"     # "step" (naive scan) | "assoc" (chunked parallel)
+
+
+def set_ssm_xla_impl(name: str) -> None:
+    """Perf knob (EXPERIMENTS.md §Perf): XLA selective-scan algorithm."""
+    global _SSM_XLA_IMPL
+    assert name in ("step", "assoc")
+    _SSM_XLA_IMPL = name
+
+
+def selective_scan(x, dt, A, Bm, C, D, h0=None, *,
+                   backend: Optional[str] = None):
+    impl = _pick(backend)
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import selective_scan as sk
+        return sk.selective_scan_pallas(x, dt, A, Bm, C, D, h0,
+                                        interpret=(impl == "interpret"))
+    if _SSM_XLA_IMPL == "assoc":
+        return _selective_scan_assoc(x, dt, A, Bm, C, D, h0)
+    return ref.selective_scan(x, dt, A, Bm, C, D, h0)
+
+
+def _selective_scan_assoc(x, dt, A, Bm, C, D, h0=None, chunk: int = 256):
+    """Chunked parallel selective scan (the TPU kernel's dataflow in XLA).
+
+    The recurrence h_t = a_t h_{t-1} + b_t is a first-order linear scan, so
+    within a chunk we use `jax.lax.associative_scan` (log-depth, fully
+    parallel on the VPU) and carry the state across chunks with an outer
+    `lax.scan`. HBM traffic drops from O(S) state read/writes (the naive
+    per-step scan) to O(S/chunk) state + streaming activations — matching
+    what the Pallas kernel achieves with VMEM-resident state.
+    """
+    B, S, Di = x.shape
+    N = A.shape[-1]
+    cs = min(chunk, S)
+    if S % cs:
+        return ref.selective_scan(x, dt, A, Bm, C, D, h0)
+    nchunks = S // cs
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+
+    # per-step coefficients: h = dA * h_prev + dBx,  (B, S, Di, N)
+    h = jnp.zeros((B, Di, N), jnp.float32) if h0 is None \
+        else h0.astype(jnp.float32)
+
+    def chunk_body(h_in, blk):
+        xc, dtc, bc, cc = blk                       # (B, cs, Di/N)
+        dA = jnp.exp(dtc[..., None] * Af)           # (B, cs, Di, N)
+        dBx = (dtc * xc)[..., None] * bc[:, :, None, :]
+        # fold the incoming state into the first step's additive term
+        dBx = dBx.at[:, 0].add(dA[:, 0] * h_in)
+
+        def combine(a, b):
+            # (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2) along time
+            return a[0] * b[0], b[0] * a[1] + b[1]
+
+        _, hs = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+        y = jnp.einsum("bsdn,bsn->bsd", hs, cc) + Df * xc
+        return hs[:, -1], y
+
+    xcs = xf.reshape(B, nchunks, cs, Di).swapaxes(0, 1)
+    dtcs = dtf.reshape(B, nchunks, cs, Di).swapaxes(0, 1)
+    bcs = Bf.reshape(B, nchunks, cs, N).swapaxes(0, 1)
+    ccs = Cf.reshape(B, nchunks, cs, N).swapaxes(0, 1)
+    hT, ys = jax.lax.scan(chunk_body, h, (xcs, dtcs, bcs, ccs))
+    y = ys.swapaxes(0, 1).reshape(B, S, Di)
+    return y.astype(x.dtype), hT
+
+
+def selective_scan_step(x, dt, A, Bm, C, D, h):
+    """Single decode step. x, dt: (B, Di); Bm, C: (B, N); h: (B, Di, N)."""
+    dA = jnp.exp(dt.astype(jnp.float32)[..., None] * A.astype(jnp.float32))
+    dBx = dt.astype(jnp.float32)[..., None] * Bm.astype(jnp.float32)[:, None, :] \
+        * x.astype(jnp.float32)[..., None]
+    h = h.astype(jnp.float32) * dA + dBx
+    y = jnp.einsum("bdn,bn->bd", h, C.astype(jnp.float32)) \
+        + D.astype(jnp.float32) * x.astype(jnp.float32)
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def rglru(x, r_gate, i_gate, a_param, h0=None, *, c: float = 8.0,
+          backend: Optional[str] = None):
+    impl = _pick(backend)
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import rglru_scan as rk
+        return rk.rglru_pallas(x, r_gate, i_gate, a_param, h0, c=c,
+                               interpret=(impl == "interpret"))
+    if _SSM_XLA_IMPL == "assoc":
+        return _rglru_assoc(x, r_gate, i_gate, a_param, h0, c=c)
+    return ref.rglru(x, r_gate, i_gate, a_param, h0, c=c)
+
+
+def _rglru_assoc(x, r_gate, i_gate, a_param, h0=None, *, c: float = 8.0,
+                 chunk: int = 256):
+    """Chunked parallel RG-LRU (same first-order-linear-scan treatment as
+    _selective_scan_assoc; diagonal state so no N blowup)."""
+    B, S, W = x.shape
+    cs = min(chunk, S)
+    if S % cs:
+        return ref.rglru(x, r_gate, i_gate, a_param, h0, c=c)
+    nchunks = S // cs
+
+    log_a = -c * jax.nn.softplus(-a_param.astype(jnp.float32))
+    r = jax.nn.sigmoid(r_gate.astype(jnp.float32))
+    a_t = jnp.exp(r * log_a)                                   # (B, S, W)
+    gated = jax.nn.sigmoid(i_gate.astype(jnp.float32)) * x.astype(jnp.float32)
+    b_t = jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 0.0)) * gated
+
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def chunk_body(h_in, blk):
+        ac, bc = blk
+        bc = bc.at[:, 0].add(ac[:, 0] * h_in)
+
+        def combine(p, q):
+            return p[0] * q[0], q[0] * p[1] + q[1]
+
+        _, hs = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        return hs[:, -1], hs
+
+    acs = a_t.reshape(B, nchunks, cs, W).swapaxes(0, 1)
+    bcs = b_t.reshape(B, nchunks, cs, W).swapaxes(0, 1)
+    hT, hs = jax.lax.scan(chunk_body, h, (acs, bcs))
+    out = hs.swapaxes(0, 1).reshape(B, S, W)
+    return out.astype(x.dtype), hT
+
+
+def rglru_step(x, r_gate, i_gate, a_param, h, c: float = 8.0):
+    """Single decode step; all (B, W)."""
+    log_a = -c * jax.nn.softplus(-a_param.astype(jnp.float32))
+    r = jax.nn.sigmoid(r_gate.astype(jnp.float32))
+    a_t = jnp.exp(r * log_a)
+    gated = jax.nn.sigmoid(i_gate.astype(jnp.float32)) * x.astype(jnp.float32)
+    h = a_t * h.astype(jnp.float32) + jnp.sqrt(jnp.maximum(1 - a_t * a_t, 0.0)) * gated
+    return h.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# LoRA-fused matmul
+# ---------------------------------------------------------------------------
+
+def lora_matmul(x, w, a=None, b=None, scale: float = 1.0, bias=None, *,
+                backend: Optional[str] = None):
+    """y = x @ w (+ scale * (x@a)@b) (+ bias). Falls back to plain matmul."""
+    if a is None:
+        y = x @ w
+        return (y + bias.astype(y.dtype)) if bias is not None else y
+    impl = _pick(backend)
+    if impl in ("pallas", "interpret") and x.ndim == 2:
+        from repro.kernels import lora_matmul as lk
+        return lk.lora_matmul_pallas(x, w, a, b, scale, bias,
+                                     interpret=(impl == "interpret"))
+    return _lora_xla(x, w, a, b, scale, bias)
+
+
+def _lora_xla(x, w, a, b, scale, bias=None):
+    """Native-dtype dots with f32 accumulation (what the MXU does).
+
+    The naive oracle upcasts x/w to f32 — on the XLA path that doubles HBM
+    traffic for EVERY projection and drags f32 tensors through the backward
+    collectives (EXPERIMENTS.md §Perf iter q4, found via the roofline
+    profile)."""
+    nd = x.ndim - 1
+    y = jax.lax.dot_general(x, w, (((nd,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(x, a, (((nd,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    y = y + scale * jax.lax.dot_general(
+        u.astype(x.dtype), b, (((u.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,127 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the ground truth for the kernel allclose sweeps in
+``tests/test_kernels.py`` — deliberately naive, no blocking, f32 math.
+
+Shared semantics (flash attention): masking is *position based*. Each query
+row has an absolute position ``q_pos[i]`` and each key/value slot a position
+``kv_pos[j]``. A slot is visible iff
+
+    kv_pos[j] < 0                        (prefix-KV slots: always visible)
+ or (kv_pos[j] <= q_pos[i]              (causal)
+     and q_pos[i] - kv_pos[j] < window)  (sliding window; window<=0 => off)
+
+Padding slots use kv_pos = +LARGE so they are never visible.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def visibility_mask(q_pos: jax.Array, kv_pos: jax.Array,
+                    window: int = 0, causal: bool = True) -> jax.Array:
+    """(S, T) boolean visibility per the shared semantics above."""
+    q = q_pos[:, None].astype(jnp.int32)
+    k = kv_pos[None, :].astype(jnp.int32)
+    vis = (k <= q) if causal else jnp.ones((q.shape[0], k.shape[1]), bool)
+    if window and window > 0:
+        vis = vis & ((q - k) < window)
+    vis = vis | (k < 0)                     # prefix slots
+    return vis
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_pos: jax.Array, kv_pos: jax.Array,
+              window: int = 0, causal: bool = True,
+              scale: Optional[float] = None) -> jax.Array:
+    """Naive GQA attention.
+
+    q: (B, S, Hq, D); k, v: (B, T, Hkv, D); Hq % Hkv == 0.
+    Returns (B, S, Hq, D) in q.dtype.
+    """
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.reshape(B, S, Hkv, g, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bsngd,btnd->bngst", qf, kf) * scale
+    vis = visibility_mask(q_pos, kv_pos, window, causal)
+    scores = jnp.where(vis[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def selective_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                   C: jax.Array, D: jax.Array,
+                   h0: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """Mamba-1 selective scan (naive lax.scan over time).
+
+    x, dt: (B, S, Di); A: (Di, N); Bm, C: (B, S, N); D: (Di,)
+    h0: optional (B, Di, N) initial state (the PEFT "state prompt").
+    Returns (y (B, S, Di), h_final (B, Di, N)); f32 math.
+    """
+    Bb, S, Di = x.shape
+    N = A.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Af, Bf, Cf = A.astype(jnp.float32), Bm.astype(jnp.float32), C.astype(jnp.float32)
+    h = jnp.zeros((Bb, Di, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        xt, dtt, bt, ct = t
+        dA = jnp.exp(dtt[..., None] * Af)                 # (B, Di, N)
+        dBx = dtt[..., None] * bt[:, None, :] * xt[..., None]
+        h = h * dA + dBx
+        y = jnp.einsum("bdn,bn->bd", h, ct) + D.astype(jnp.float32) * xt
+        return h, y
+
+    ts = (jnp.swapaxes(xf, 0, 1), jnp.swapaxes(dtf, 0, 1),
+          jnp.swapaxes(Bf, 0, 1), jnp.swapaxes(Cf, 0, 1))
+    h, ys = jax.lax.scan(step, h, ts)
+    return jnp.swapaxes(ys, 0, 1).astype(x.dtype), h
+
+
+def rglru(x: jax.Array, r_gate: jax.Array, i_gate: jax.Array, a_param: jax.Array,
+          h0: Optional[jax.Array] = None, c: float = 8.0) -> tuple[jax.Array, jax.Array]:
+    """RG-LRU recurrence (RecurrentGemma eq. 5-7), naive scan.
+
+    x, r_gate, i_gate: (B, S, W) — pre-computed gate pre-activations.
+    a_param: (W,) raw; a = sigmoid(a_param); a_t = a ** (c * sigmoid(r_t)).
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (sigmoid(i_t) * x_t)
+    Returns (h_seq (B, S, W), h_final (B, W)).
+    """
+    B, S, W = x.shape
+    log_a = -c * jax.nn.softplus(-a_param.astype(jnp.float32))  # log sigmoid(a)*c... see note
+    # a = sigmoid(a_param); a_t = exp(c * r_t * log(a)) with log(a) = -softplus(-a_param)
+    h = jnp.zeros((B, W), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, t):
+        xt, rt, it = t
+        r = jax.nn.sigmoid(rt.astype(jnp.float32))
+        log_at = r * log_a                                # (B, W), log_a includes factor c
+        a_t = jnp.exp(log_at)
+        gated = jax.nn.sigmoid(it.astype(jnp.float32)) * xt.astype(jnp.float32)
+        h = a_t * h + jnp.sqrt(jnp.maximum(1.0 - a_t * a_t, 0.0)) * gated
+        return h, h
+
+    _, hs = jax.lax.scan(step, h, (jnp.swapaxes(x, 0, 1), jnp.swapaxes(r_gate, 0, 1),
+                                   jnp.swapaxes(i_gate, 0, 1)))
+    hs = jnp.swapaxes(hs, 0, 1)
+    return hs.astype(x.dtype), hs[:, -1].astype(jnp.float32)
+
+
+def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
+                scale: float, bias: Optional[jax.Array] = None) -> jax.Array:
+    """y = x @ w + scale * (x @ a) @ b (+ bias). x: (..., K); w: (K, N)."""
+    xf = x.astype(jnp.float32)
+    y = xf @ w.astype(jnp.float32)
+    y = y + scale * (xf @ a.astype(jnp.float32)) @ b.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,374 @@
+"""Roofline-term extraction from compiled HLO (DESIGN.md §7).
+
+``compiled.cost_analysis()`` counts a ``while`` body exactly once, so with
+scanned layer stacks it under-reports by ~n_layers (verified in-container).
+This module re-derives the three roofline terms by walking the *text* HLO:
+
+- ops inside ``while`` bodies are multiplied by the loop's
+  ``backend_config.known_trip_count`` (nesting-aware);
+- FLOPs come from ``dot``/``convolution`` ops (2 x out_elems x contraction);
+- HBM bytes are counted at fusion boundaries (operands + results), modelling
+  fused intermediates as register/VMEM-resident;
+- collective bytes sum operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute.
+
+All values are per-device (the SPMD module is per-partition), so terms
+divide by a single chip's peak numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+from typing import Optional
+
+# v5e hardware constants (from the task spec)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([\w\-]+)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _type_bytes(t: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(t):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _type_elems(t: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(t):
+        if m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                # everything after the '(' of the operand list
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    by_name: dict[str, Op]
+
+
+def parse_hlo(text: str) -> tuple[dict[str, Computation], Optional[str]]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    # tuple types embed /*index=N*/ comments whose '=' breaks the op regex
+    text = re.sub(r"/\*.*?\*/", "", text)
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and "=" not in line.split("{")[0]:
+                cur = Computation(m.group(1), [], {})
+                if line.startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2).strip(), m.group(3), m.group(4))
+            cur.ops.append(op)
+            cur.by_name[op.name] = op
+    return comps, entry
+
+
+def _called(op: Op, attr: str) -> list[str]:
+    m = re.search(attr + r"=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?", op.rest)
+    if not m:
+        return []
+    return [x.strip().lstrip("%") for x in m.group(1).split(",")]
+
+
+def _trip_count(op: Op) -> int:
+    m = re.search(r'known_trip_count[\\"]*:?\s*[{\\"]*n[\\"]*:+[\\"]*(\d+)',
+                  op.rest)
+    return int(m.group(1)) if m else 1
+
+
+def _operand_names(op: Op) -> list[str]:
+    # operand list terminates at the first ')' at depth 0
+    depth, out, cur = 0, [], []
+    for ch in op.rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    out.append("".join(cur))
+    names = []
+    for o in out:
+        o = o.strip()
+        if o.startswith("%"):
+            names.append(o[1:].split(" ")[0].split(")")[0])
+        else:
+            m = re.match(r"[a-z0-9]+\[[\d,]*\][^%]*%([\w.\-]+)", o)
+            if m:
+                names.append(m.group(1))
+    return names
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = _type_elems(op.type_str)
+    operands = _operand_names(op)
+    contr = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    if m and operands:
+        lhs = comp.by_name.get(operands[0])
+        lhs_t = lhs.type_str if lhs else ""
+        sm = _SHAPE_RE.search(lhs_t)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for c in m.group(1).split(","):
+                if c and int(c) < len(dims):
+                    contr *= dims[int(c)]
+    return 2.0 * out_elems * contr
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    # flops = 2 * out_elems * (kernel spatial x in_features)
+    out_elems = _type_elems(op.type_str)
+    operands = _operand_names(op)
+    if len(operands) < 2:
+        return 0.0
+    rhs = comp.by_name.get(operands[1])
+    if rhs is None:
+        return 0.0
+    sm = _SHAPE_RE.search(rhs.type_str)
+    if not sm:
+        return 0.0
+    dims = [int(d) for d in sm.group(2).split(",") if d]
+    out_feat = max(dims) if dims else 1      # conservative: exclude one dim
+    k = 1
+    for d in dims:
+        k *= d
+    return 2.0 * out_elems * (k / max(out_feat, 1))
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    op_flops: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def asdict(self) -> dict:
+        return {"flops": self.flops, "bytes_accessed": self.bytes_accessed,
+                "collective_bytes": self.collective_bytes,
+                "collectives": dict(self.collectives),
+                "op_flops": dict(self.op_flops)}
+
+
+def walk(comps: dict[str, Computation], name: str, mult: float,
+         acc: HloCosts, count_bytes: bool = True,
+         _seen_fusion: bool = False) -> None:
+    comp = comps.get(name)
+    if comp is None:
+        return
+    for op in comp.ops:
+        oc = op.opcode
+        if oc == "while":
+            trip = _trip_count(op)
+            for body in _called(op, "body") + _called(op, "condition"):
+                walk(comps, body, mult * trip, acc, count_bytes)
+        elif oc == "fusion":
+            if count_bytes:
+                acc.bytes_accessed += mult * _fusion_bytes(op, comp, comps)
+            for c in _called(op, "calls"):
+                walk(comps, c, mult, acc, count_bytes=False)
+        elif oc in ("call", "async-start", "custom-call"):
+            for c in _called(op, "calls") + _called(op, "to_apply"):
+                walk(comps, c, mult, acc, count_bytes)
+        elif oc == "conditional":
+            for c in (_called(op, "true_computation")
+                      + _called(op, "false_computation")
+                      + _called(op, "branch_computations")):
+                walk(comps, c, mult, acc, count_bytes)
+        elif oc == "dot":
+            f = _dot_flops(op, comp) * mult
+            acc.flops += f
+            acc.op_flops["dot"] += f
+            if count_bytes:
+                acc.bytes_accessed += mult * _op_bytes(op, comp)
+        elif oc == "convolution":
+            f = _conv_flops(op, comp) * mult
+            acc.flops += f
+            acc.op_flops["convolution"] += f
+            if count_bytes:
+                acc.bytes_accessed += mult * _op_bytes(op, comp)
+        elif any(oc.startswith(c) for c in COLLECTIVES):
+            nb = sum(_type_bytes(comp.by_name[o].type_str)
+                     for o in _operand_names(op) if o in comp.by_name)
+            if nb == 0:                     # fall back to result size
+                nb = _type_bytes(op.type_str)
+            acc.collective_bytes += mult * nb
+            acc.collectives[oc] += mult * nb
+            if count_bytes:
+                acc.bytes_accessed += mult * _op_bytes(op, comp)
+        else:
+            if count_bytes and oc not in (
+                    "parameter", "constant", "get-tuple-element", "tuple",
+                    "bitcast"):
+                acc.bytes_accessed += mult * _op_bytes(op, comp)
+
+
+def _fusion_bytes(op: Op, comp: Computation, comps: dict) -> float:
+    """Fusion boundary traffic. In-place update fusions (root is a
+    dynamic-update-slice) touch only the update slice, not the aliased
+    buffer — critical for KV-cache writes inside scans."""
+    for cname in _called(op, "calls"):
+        inner = comps.get(cname)
+        if inner is None or not inner.ops:
+            continue
+        dus = [o for o in inner.ops if o.opcode == "dynamic-update-slice"]
+        if dus:
+            total = 0.0
+            for d in dus:
+                ops_ = _operand_names(d)
+                upd = inner.by_name.get(ops_[1]) if len(ops_) > 1 else None
+                total += 2.0 * _type_bytes(
+                    (upd or d).type_str if upd else d.type_str)
+            return total
+    nb = _type_bytes(op.type_str)
+    for on in _operand_names(op):
+        src = comp.by_name.get(on)
+        if src is not None:
+            nb += _type_bytes(src.type_str)
+    return nb
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    """HBM traffic model per op.
+
+    Slicing ops touch only the slice (XLA updates in place); everything else
+    reads its operands and writes its result. This matters enormously for
+    decode: a dynamic-update-slice of one token into a 32k-slot KV cache
+    costs ~one token, not the cache."""
+    oc = op.opcode
+    if oc == "dynamic-update-slice":
+        ops_ = _operand_names(op)
+        upd = comp.by_name.get(ops_[1]) if len(ops_) > 1 else None
+        return 2.0 * _type_bytes(upd.type_str if upd else op.type_str)
+    if oc in ("dynamic-slice", "slice", "gather", "copy", "broadcast",
+              "iota", "reshape", "transpose", "concatenate", "pad"):
+        return 2.0 * _type_bytes(op.type_str)
+    nb = _type_bytes(op.type_str)
+    for on in _operand_names(op):
+        src = comp.by_name.get(on)
+        if src is not None:
+            nb += _type_bytes(src.type_str)
+    return nb
+
+
+def analyze_hlo_text(text: str) -> HloCosts:
+    comps, entry = parse_hlo(text)
+    acc = HloCosts()
+    if entry:
+        walk(comps, entry, 1.0, acc)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Roofline report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    useful_ratio: float
+    bottleneck: str
+    collectives: dict
+    memory_analysis: Optional[dict] = None
+
+    @staticmethod
+    def from_costs(costs: HloCosts, *, arch: str, shape: str, mesh: str,
+                   chips: int, model_flops: float,
+                   memory_analysis: Optional[dict] = None) -> "Roofline":
+        ct = costs.flops / PEAK_FLOPS
+        mt = costs.bytes_accessed / HBM_BW
+        lt = costs.collective_bytes / ICI_BW
+        terms = {"compute": ct, "memory": mt, "collective": lt}
+        useful = model_flops / max(costs.flops * chips, 1.0)
+        return Roofline(
+            arch=arch, shape=shape, mesh=mesh, chips=chips,
+            flops_per_device=costs.flops,
+            bytes_per_device=costs.bytes_accessed,
+            collective_bytes_per_device=costs.collective_bytes,
+            compute_s=ct, memory_s=mt, collective_s=lt,
+            model_flops=model_flops, useful_ratio=useful,
+            bottleneck=max(terms, key=terms.get),
+            collectives=dict(costs.collectives),
+            memory_analysis=memory_analysis)
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def model_flops_for(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D (train) / 2·N_active per token."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.seq_len * shape.global_batch
+    return 2.0 * n * shape.global_batch          # decode: one token per seq

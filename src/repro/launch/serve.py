@@ -1,0 +1,96 @@
+"""Serving launcher: SL-based task inference with batched requests.
+
+Prefill + decode loop against a fine-tuned (adapter-loaded) model; the
+parameter-efficient deployment path (§III-A.2): backbone weights are
+initialized locally (presumed synchronized), only adapters come from a
+checkpoint.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --arch vit-edge --reduced \
+      --batch 4 --prompt-len 16 --gen 8 [--adapters ckpt.npz]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs.base import get_config
+from repro.models import model as M
+
+
+def generate(params, cfg, prompts: jax.Array, *, gen: int,
+             extra_batch: dict | None = None, greedy: bool = True,
+             key=None):
+    """Batched greedy/sampled generation. prompts: (B, S)."""
+    B, S = prompts.shape
+    n_vis = cfg.vlm.n_vis_tokens if cfg.family == "vlm" else 0
+    batch = {"tokens": prompts, **(extra_batch or {})}
+    prefill_j = jax.jit(lambda p, b: M.prefill(p, b, cfg, max_len=S + n_vis + gen))
+    decode_j = jax.jit(lambda p, t, c, pos: M.decode_step(p, t, c, pos, cfg))
+
+    logits, caches = prefill_j(params, batch)
+    out = []
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    for i in range(gen):
+        out.append(tok)
+        pos = jnp.asarray(S + n_vis + i, jnp.int32)
+        logits, caches = decode_j(params, tok, caches, pos)
+        if greedy or key is None:
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1])[:, None].astype(jnp.int32)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vit-edge")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--adapters", default=None)
+    ap.add_argument("--requests", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init(cfg, key)
+    if args.adapters:
+        params = ckpt_io.load_adapters(args.adapters, params)
+        print(f"[serve] loaded adapters from {args.adapters} "
+              f"(parameter-efficient deployment)")
+
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"vision_embeds": jnp.zeros(
+            (args.batch, cfg.vlm.n_vis_tokens, cfg.d_model),
+            jnp.dtype(cfg.dtype))}
+    if cfg.family == "audio":
+        extra = {"frames": jnp.zeros(
+            (args.batch, cfg.audio.n_audio_frames, cfg.d_model),
+            jnp.dtype(cfg.dtype))}
+
+    for r in range(args.requests):
+        key, sub = jax.random.split(key)
+        prompts = jax.random.randint(sub, (args.batch, args.prompt_len), 0,
+                                     cfg.vocab_size, dtype=jnp.int32)
+        t0 = time.time()
+        toks = generate(params, cfg, prompts, gen=args.gen, extra_batch=extra)
+        dt = time.time() - t0
+        tps = args.batch * args.gen / dt
+        print(f"[serve] request {r}: generated {toks.shape} in {dt:.2f}s "
+              f"({tps:.1f} tok/s); first row: {np.asarray(toks[0])[:8]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""GQA attention with prefix-KV prompts, LoRA, sliding window, and KV caching.
+
+The prefix-KV prompt module is the causal-LM analogue of the paper's
+per-layer prompt modules (VPT-deep, §III-A/Fig 1): each layer owns ``n_p``
+learned key/value slots, visible to every query, carrying no positional
+encoding (position < 0 in the shared masking semantics).
+
+Modes:
+- train/prefill: full-sequence blocked flash attention (kernels/ops.py);
+  prefill additionally returns the layer KV cache (rolling window buffer for
+  the sliding variant).
+- decode: single-token einsum attention against the cache; the cache is
+  updated in place at ``pos`` (or slot ``pos % window`` for sliding).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.layers import rope
+from repro.sharding.rules import ParamSpec, shard
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_spec(cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.dtype)
+    s = {
+        "wq": ParamSpec((d, nh * hd), dt, ("fsdp", "heads"), init="scaled"),
+        "wk": ParamSpec((d, nkv * hd), dt, ("fsdp", "kv_heads"), init="scaled"),
+        "wv": ParamSpec((d, nkv * hd), dt, ("fsdp", "kv_heads"), init="scaled"),
+        "wo": ParamSpec((nh * hd, d), dt, ("heads", "fsdp"), init="scaled"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((nh * hd,), dt, ("heads",), init="zeros")
+        s["bk"] = ParamSpec((nkv * hd,), dt, ("kv_heads",), init="zeros")
+        s["bv"] = ParamSpec((nkv * hd,), dt, ("kv_heads",), init="zeros")
+    return s
+
+
+def _proj(x, w, bias, lora, scale):
+    """Projection with optional LoRA branch (kernel-dispatched)."""
+    if lora is not None:
+        shp = x.shape
+        y = kops.lora_matmul(x.reshape(-1, shp[-1]), w, lora["a"], lora["b"],
+                             scale, bias)
+        return y.reshape(*shp[:-1], w.shape[-1])
+    y = x @ w
+    return y + bias.astype(y.dtype) if bias is not None else y
+
+
+def _qkv(params, adapters, x, cfg: ModelConfig, kv_x=None):
+    """Compute q, k, v with LoRA; reshape to (B, S, H, D)."""
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    lora = (adapters or {}).get("lora", {})
+    lscale = cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1)
+    kv_in = x if kv_x is None else kv_x
+    q = _proj(x, params["wq"], params.get("bq"), lora.get("q"), lscale)
+    k = _proj(kv_in, params["wk"], params.get("bk"), lora.get("k"), lscale)
+    v = _proj(kv_in, params["wv"], params.get("bv"), lora.get("v"), lscale)
+    B, S = x.shape[:2]
+    Skv = kv_in.shape[1]
+    return (q.reshape(B, S, nh, hd), k.reshape(B, Skv, nkv, hd),
+            v.reshape(B, Skv, nkv, hd))
+
+
+def _with_prefix(k, v, adapters, B):
+    """Prepend per-layer prefix-KV slots (broadcast over batch)."""
+    pfx = (adapters or {}).get("prefix")
+    if pfx is None:
+        return k, v, 0
+    n_p = pfx["k"].shape[0]
+    pk = jnp.broadcast_to(pfx["k"][None], (B, *pfx["k"].shape)).astype(k.dtype)
+    pv = jnp.broadcast_to(pfx["v"][None], (B, *pfx["v"].shape)).astype(v.dtype)
+    return jnp.concatenate([pk, k], 1), jnp.concatenate([pv, v], 1), n_p
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence (train / prefill)
+# ---------------------------------------------------------------------------
+
+def attention_seq(params: dict, adapters: Optional[dict], x: jax.Array,
+                  cfg: ModelConfig, *, positions: jax.Array,
+                  causal: bool = True, window: int = 0,
+                  kv_x: Optional[jax.Array] = None,
+                  kv_positions: Optional[jax.Array] = None,
+                  use_rope: bool = True,
+                  make_cache: bool = False,
+                  cache_len: Optional[int] = None):
+    """Returns (out (B,S,d_model), cache or None)."""
+    B, S = x.shape[:2]
+    q, k, v = _qkv(params, adapters, x, cfg, kv_x)
+    kv_positions = positions if kv_positions is None else kv_positions
+    if kv_x is None and use_rope:                          # self-attention: RoPE
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, kv_positions, cfg.rope_theta)
+    q = shard(q, "batch", "attn_seq", "heads", "head_dim")
+    k = shard(k, "batch", "attn_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "attn_seq", "kv_heads", "head_dim")
+
+    kp, vp, n_p = _with_prefix(k, v, adapters, B)
+    kv_pos = jnp.concatenate(
+        [jnp.full((n_p,), -1, jnp.int32), kv_positions.astype(jnp.int32)]) \
+        if n_p else kv_positions.astype(jnp.int32)
+
+    out = kops.flash_attention(
+        q, kp, vp, q_pos=positions.astype(jnp.int32), kv_pos=kv_pos,
+        window=window, causal=causal)
+    out = out.reshape(B, S, -1)
+    y = _proj(out, params["wo"], None,
+              (adapters or {}).get("lora", {}).get("o"),
+              cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1))
+    y = shard(y, "batch", "seq", "d_model")
+
+    cache = None
+    if make_cache:
+        if window and window > 0:                          # rolling buffer, W slots
+            W = window
+            keep = min(S, W)
+            ps = jnp.arange(S - keep, S, dtype=jnp.int32)  # kept absolute positions
+            cache_k = jnp.zeros((B, W, *k.shape[2:]), k.dtype)
+            cache_k = cache_k.at[:, ps % W].set(k[:, -keep:])
+            cache_v = jnp.zeros((B, W, *v.shape[2:]), v.dtype)
+            cache_v = cache_v.at[:, ps % W].set(v[:, -keep:])
+            # +1e9 sentinel: empty slots must be *invisible* (negative would
+            # mark them as always-visible prefix slots in the mask rules)
+            cpos = jnp.full((W,), 10 ** 9, jnp.int32).at[ps % W].set(ps)
+            cache = {"k": cache_k, "v": cache_v, "pos": cpos}
+        else:
+            L = max(cache_len or S, S)
+            pad = L - S
+            cache = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "pos": jnp.pad(positions.astype(jnp.int32), (0, pad),
+                               constant_values=10 ** 9),
+            }
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against cache)
+# ---------------------------------------------------------------------------
+
+def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
+                     cache: dict, cfg: ModelConfig, *, pos: jax.Array,
+                     window: int = 0, cross: bool = False,
+                     use_rope: bool = True):
+    """x: (B, 1, d). cache: {'k','v','pos'} (+ static for cross). Returns
+    (out, new_cache)."""
+    B = x.shape[0]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    lora = (adapters or {}).get("lora", {})
+    lscale = cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1)
+
+    q = _proj(x, params["wq"], params.get("bq"), lora.get("q"), lscale)
+    q = q.reshape(B, 1, nh, hd)
+
+    if cross:
+        k, v = cache["k"], cache["v"]
+        kv_pos = cache["pos"]
+        new_cache = cache
+    else:
+        if use_rope:
+            q = rope(q, pos[None].astype(jnp.int32)[None], cfg.rope_theta)
+        k1 = _proj(x, params["wk"], params.get("bk"), lora.get("k"), lscale)
+        v1 = _proj(x, params["wv"], params.get("bv"), lora.get("v"), lscale)
+        k1 = k1.reshape(B, 1, nkv, hd)
+        if use_rope:
+            k1 = rope(k1, pos[None].astype(jnp.int32)[None], cfg.rope_theta)
+        v1 = v1.reshape(B, 1, nkv, hd)
+        slot = (pos % window).astype(jnp.int32) if window and window > 0 \
+            else pos.astype(jnp.int32)
+        k = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
+                                         (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
+                                         (0, slot, 0, 0))
+        kv_pos = jax.lax.dynamic_update_slice(
+            cache["pos"], pos.astype(jnp.int32)[None], (slot,))
+        new_cache = {"k": k, "v": v, "pos": kv_pos}
+
+    k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+
+    g = nh // nkv
+    qf = q.reshape(B, 1, nkv, g, hd)
+    qp = pos.astype(jnp.int32)
+
+    def scores(kk, poss, prefix: bool):
+        """Masked scores against one KV bank (native dtype, f32 accum —
+        casting the cache to f32 before the dot doubles HBM traffic)."""
+        s = jnp.einsum("bsngd,btnd->bngst", qf, kk.astype(qf.dtype),
+                       preferred_element_type=jnp.float32) * (hd ** -0.5)
+        if prefix or cross:
+            return s                                  # always fully visible
+        vis = poss <= qp
+        if window and window > 0:
+            vis = vis & ((qp - poss) < window)
+        return jnp.where(vis[None, None, None, None, :], s, NEG_INF)
+
+    # Prefix-KV slots are attended SEPARATELY and merged with an
+    # online-softmax combine (§Perf d2): concatenating n_p slots onto the
+    # seq-sharded cache misaligns its tiling and makes GSPMD all-gather the
+    # whole cache every layer (measured: the dominant decode traffic).
+    s_main = scores(k, kv_pos, prefix=False)          # (B,n,g,1,T) sharded T
+    pfx = (adapters or {}).get("prefix") if not cross else None
+
+    def pv(p, vv):
+        return jnp.einsum("bngst,btnd->bsngd", p.astype(vv.dtype), vv,
+                          preferred_element_type=jnp.float32)
+
+    if pfx is not None:
+        pk = jnp.broadcast_to(pfx["k"][None], (B, *pfx["k"].shape))
+        pvv = jnp.broadcast_to(pfx["v"][None], (B, *pfx["v"].shape))
+        s_pfx = scores(pk, None, prefix=True)         # (B,n,g,1,n_p)
+        m = jnp.maximum(jnp.max(s_main, -1), jnp.max(s_pfx, -1))
+        e_main = jnp.exp(s_main - m[..., None])
+        e_pfx = jnp.exp(s_pfx - m[..., None])
+        l = jnp.sum(e_main, -1) + jnp.sum(e_pfx, -1)     # (B, n, g, 1)
+        denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
+        o = (pv(e_main, v) + pv(e_pfx, pvv.astype(v.dtype))) / denom
+    else:
+        p = jax.nn.softmax(s_main, axis=-1)
+        o = pv(p, v)
+    o = o.reshape(B, 1, nh * hd).astype(x.dtype)
+    y = _proj(o, params["wo"], None, lora.get("o"), lscale)
+    return y, new_cache
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, *,
+               window: int = 0, layers: Optional[int] = None) -> dict:
+    """ParamSpec tree for a (stacked-over-layers) KV cache."""
+    L = layers if layers is not None else cfg.n_layers
+    nkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    S = min(window, seq_len) if window and window > 0 else seq_len
+    S = window if window and window > 0 else seq_len
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": ParamSpec((L, batch, S, nkv, hd), dt,
+                       (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+                       init="zeros"),
+        "v": ParamSpec((L, batch, S, nkv, hd), dt,
+                       (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+                       init="zeros"),
+        "pos": ParamSpec((L, S), jnp.int32, (None, "kv_seq"), init="zeros"),
+    }

@@ -1,0 +1,217 @@
+"""Public model API: spec / init / train forward / prefill / decode.
+
+Params are split at the top level into ``backbone`` (frozen under the
+paper's PEFT regime) and ``adapters`` (the tunable modules: prefix-KV
+prompts, LoRA, state prompts, classification head). core/peft.py and
+core/hfsl.py operate on this split.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import encdec
+from repro.models.layers import (cross_entropy, embed, embed_spec, rmsnorm,
+                                 rmsnorm_spec, unembed)
+from repro.models.transformer import (adapter_stack_spec, cache_group_spec,
+                                      stack_decode, stack_seq, stack_spec)
+from repro.sharding.rules import ParamSpec, init_from_spec, shard
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+
+def backbone_spec(cfg: ModelConfig) -> dict:
+    s: dict = {"embed": embed_spec(cfg.vocab_size, cfg.d_model, jnp.dtype(cfg.dtype)),
+               "final_norm": rmsnorm_spec(cfg.d_model)}
+    if cfg.family == "audio":
+        s["encdec"] = encdec.encdec_stack_spec(cfg)
+    else:
+        s["layers"] = stack_spec(cfg)
+    if not cfg.tie_embeddings:
+        s["lm_head"] = embed_spec(cfg.vocab_size, cfg.d_model, jnp.dtype(cfg.dtype))
+    return s
+
+
+def adapter_spec(cfg: ModelConfig) -> dict:
+    if cfg.family == "audio":
+        a: dict = {"stack": encdec.encdec_adapter_spec(cfg)}
+    else:
+        a = {"stack": adapter_stack_spec(cfg)}
+    if cfg.peft.head_dim_out:
+        a["head"] = {
+            "w": ParamSpec((cfg.d_model, cfg.peft.head_dim_out), jnp.float32,
+                           ("fsdp", None), init="scaled"),
+            "b": ParamSpec((cfg.peft.head_dim_out,), jnp.float32, (None,),
+                           init="zeros"),
+        }
+    return a
+
+
+def model_spec(cfg: ModelConfig) -> dict:
+    return {"backbone": backbone_spec(cfg), "adapters": adapter_spec(cfg)}
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> dict:
+    return init_from_spec(key, model_spec(cfg))
+
+
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    if cfg.family == "audio":
+        return encdec.encdec_cache_spec(cfg, batch, seq_len)
+    return cache_group_spec(cfg, batch, seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (dry-run contract)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    tok = lambda s: jax.ShapeDtypeStruct((B, s), jnp.int32)
+    if shape.kind == "decode":
+        batch: dict = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    elif cfg.family == "vlm":
+        n_vis = cfg.vlm.n_vis_tokens
+        batch = {"tokens": tok(S - n_vis),
+                 "vision_embeds": jax.ShapeDtypeStruct(
+                     (B, n_vis, cfg.d_model), dt)}
+    elif cfg.family == "audio":
+        batch = {"tokens": tok(S),
+                 "frames": jax.ShapeDtypeStruct(
+                     (B, cfg.audio.n_audio_frames, cfg.d_model), dt)}
+    else:
+        batch = {"tokens": tok(S)}
+    if shape.kind == "train" and "tokens" in batch:
+        batch["labels"] = jax.ShapeDtypeStruct(batch["tokens"].shape, jnp.int32)
+    return batch
+
+
+def input_pspec_axes(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Logical axes per input leaf (same tree structure as input_specs)."""
+    out = {}
+    for k, v in input_specs(cfg, shape).items():
+        out[k] = ("batch",) + ("seq",) * (len(v.shape) - 1) if v.ndim <= 2 \
+            else ("batch", "seq", "d_model")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig):
+    """Token (+modality) embedding. Returns (x, positions, label_offset)."""
+    x = embed(params["backbone"]["embed"], batch["tokens"])
+    x = shard(x, "batch", "seq", "d_model")
+    n_vis = 0
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        vis = batch["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+        n_vis = vis.shape[1]
+    S = x.shape[1]
+    return x, jnp.arange(S, dtype=jnp.int32), n_vis
+
+
+def forward(params: dict, batch: dict, cfg: ModelConfig, *,
+            mode: str = "train", remat: Optional[bool] = None) -> dict:
+    """Full-sequence forward. Returns {'hidden', 'logits', 'aux'}."""
+    remat = (mode == "train") if remat is None else remat
+    adapters = params.get("adapters", {}).get("stack", {})
+    if cfg.family == "audio":
+        enc_out = encdec.encode(params["backbone"]["encdec"], adapters,
+                                batch["frames"], cfg, remat=remat)
+        tok_emb = embed(params["backbone"]["embed"], batch["tokens"])
+        x, _ = encdec.decode_seq(params["backbone"]["encdec"], adapters,
+                                 tok_emb, enc_out, cfg, remat=remat)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        x, positions, _ = _embed_inputs(params, batch, cfg)
+        x, _, aux = stack_seq(params["backbone"]["layers"], adapters, x, cfg,
+                              positions=positions, remat=remat)
+    x = rmsnorm(params["backbone"]["final_norm"], x)
+    head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
+    logits = unembed(head_tbl, x)
+    logits = shard(logits, "batch", "seq", "vocab")
+    return {"hidden": x, "logits": logits, "aux": aux}
+
+
+def lm_loss(params: dict, batch: dict, cfg: ModelConfig, *,
+            remat: Optional[bool] = None) -> tuple[jax.Array, dict]:
+    out = forward(params, batch, cfg, mode="train", remat=remat)
+    logits = out["logits"]
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:          # vlm: loss on text only
+        logits = logits[:, -labels.shape[1]:]
+    loss = cross_entropy(logits, labels) + out["aux"]
+    return loss, {"aux": out["aux"]}
+
+
+def classify(params: dict, batch: dict, cfg: ModelConfig, *,
+             remat: bool = False) -> jax.Array:
+    """Paper case-study head: mean-pool hidden states -> adapter head logits."""
+    out = forward(params, batch, cfg, mode="eval", remat=remat)
+    pooled = jnp.mean(out["hidden"].astype(jnp.float32), axis=1)
+    h = params["adapters"]["head"]
+    return pooled @ h["w"] + h["b"]
+
+
+def classify_loss(params: dict, batch: dict, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    logits = classify(params, batch, cfg)
+    loss = cross_entropy(logits, batch["label"])
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["label"]).astype(jnp.float32))
+    return loss, {"acc": acc}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def prefill(params: dict, batch: dict, cfg: ModelConfig,
+            max_len: Optional[int] = None) -> tuple[jax.Array, dict]:
+    """Run the prompt, build caches (padded to max_len for decoding into).
+
+    Returns (last-token logits, caches)."""
+    adapters = params.get("adapters", {}).get("stack", {})
+    if cfg.family == "audio":
+        enc_out = encdec.encode(params["backbone"]["encdec"], adapters,
+                                batch["frames"], cfg)
+        tok_emb = embed(params["backbone"]["embed"], batch["tokens"])
+        x, caches = encdec.decode_seq(params["backbone"]["encdec"], adapters,
+                                      tok_emb, enc_out, cfg, make_cache=True,
+                                      cache_len=max_len)
+    else:
+        x, positions, _ = _embed_inputs(params, batch, cfg)
+        x, caches, _ = stack_seq(params["backbone"]["layers"], adapters, x,
+                                 cfg, positions=positions, make_cache=True,
+                                 remat=False, cache_len=max_len)
+    x = rmsnorm(params["backbone"]["final_norm"], x[:, -1:])
+    head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
+    return unembed(head_tbl, x), caches
+
+
+def decode_step(params: dict, token: jax.Array, caches: dict,
+                pos: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One token. token: (B, 1) int32; pos: scalar int32 (current position)."""
+    adapters = params.get("adapters", {}).get("stack", {})
+    x = embed(params["backbone"]["embed"], token)
+    x = shard(x, "batch", "seq", "d_model")
+    if cfg.family == "audio":
+        x, caches = encdec.decode_step(params["backbone"]["encdec"], adapters,
+                                       x, caches, cfg, pos=pos)
+    else:
+        x, caches = stack_decode(params["backbone"]["layers"], adapters, x,
+                                 caches, cfg, pos=pos)
+    x = rmsnorm(params["backbone"]["final_norm"], x)
+    head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
+    logits = unembed(head_tbl, x)
+    return logits, caches

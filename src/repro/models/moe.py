@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+TPU adaptation (DESIGN.md §2): instead of the GShard (tokens, E, C) one-hot
+dispatch einsum — O(T·E·C) memory, hopeless at 1M tokens x 384 experts — we
+sort token->expert assignments, scatter tokens into a per-expert capacity
+buffer (E, C, d) sharded over the `model` axis, run the expert FFNs as one
+batched einsum against the expert-sharded stacked weights, and gather back.
+Under GSPMD this lowers to the expected all-to-all-style collectives between
+the token (data) and expert (model) shardings.
+
+Experts and the router stay frozen under the paper's PEFT regime (DESIGN.md
+§5); adapters only touch attention/head elsewhere.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import mlp, mlp_spec
+from repro.sharding.rules import ParamSpec, shard
+
+
+def moe_spec(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    m = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    s = {
+        "router": ParamSpec((d, m.n_experts), jnp.float32, ("moe_fsdp", "experts"),
+                            init="scaled"),
+        # experts shard over `model` (training default; serving rules flip
+        # to expert-parallel-over-`data`); the d_model dim shards over the
+        # dedicated `moe_fsdp` axis. d_ff stays unsharded (would double-map).
+        "gate": ParamSpec((m.n_experts, d, m.d_ff_expert), dt,
+                          ("experts", "moe_fsdp", None), init="scaled"),
+        "up": ParamSpec((m.n_experts, d, m.d_ff_expert), dt,
+                        ("experts", "moe_fsdp", None), init="scaled"),
+        "down": ParamSpec((m.n_experts, m.d_ff_expert, d), dt,
+                          ("experts", None, "moe_fsdp"), init="scaled"),
+    }
+    if m.n_shared_experts:
+        s["shared"] = mlp_spec(d, m.n_shared_experts * m.d_ff_expert, dt)
+    return s
+
+
+def capacity(n_tokens: int, cfg: ModelConfig, factor=None) -> int:
+    m = cfg.moe
+    f = m.capacity_factor if factor is None else factor
+    if f <= 0:                           # no-drop mode: full fan-in capacity
+        return n_tokens * m.top_k
+    c = math.ceil(n_tokens * m.top_k / m.n_experts * f)
+    return max(8, c + (-c) % 8)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+              capacity_factor=None):
+    """x: (B, S, d) or (B, d). Returns (y, aux_loss)."""
+    m = cfg.moe
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xt = x.reshape(-1, d)                                   # (T, d)
+    T = xt.shape[0]
+    E, k = m.n_experts, m.top_k
+    C = capacity(T, cfg, capacity_factor)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])    # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                  # (T, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch -------------------------------------------
+    e_flat = top_e.reshape(-1)                              # (T*k,)
+    w_flat = top_w.reshape(-1)
+    tok_idx = jnp.arange(T * k, dtype=jnp.int32) // k
+    order = jnp.argsort(e_flat, stable=True)
+    se, st, sw = e_flat[order], tok_idx[order], w_flat[order]
+    starts = jnp.searchsorted(se, jnp.arange(E, dtype=se.dtype))
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[se].astype(jnp.int32)
+    keep = pos < C
+    dest = jnp.where(keep, se.astype(jnp.int32) * C + pos, E * C)  # drop slot
+
+    buf = jnp.zeros((E * C, d), x.dtype)
+    buf = buf.at[dest].set(xt[st], mode="drop")
+    buf = shard(buf.reshape(E, C, d), "act_experts", None, "d_model")
+
+    # ---- expert FFN (stacked, expert-sharded) --------------------------
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["gate"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, params["up"])
+    h = shard(h, "act_experts", None, None)
+    out = jnp.einsum("ecf,efd->ecd", h, params["down"]).reshape(E * C, d)
+
+    # ---- combine --------------------------------------------------------
+    safe = jnp.minimum(dest, E * C - 1)
+    yc = out[safe] * keep[:, None].astype(out.dtype)
+    y = jnp.zeros((T, d), jnp.float32).at[st].add(
+        sw[:, None] * yc.astype(jnp.float32))
+    y = y.astype(x.dtype)
+
+    if m.n_shared_experts:
+        y = y + mlp(params["shared"], xt)
+
+    # ---- load-balance aux loss (Switch-style) ---------------------------
+    route_frac = jnp.zeros((E,), jnp.float32).at[e_flat].add(1.0) / (T * k)
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(route_frac * prob_frac) * m.router_aux_loss
+
+    return y.reshape(orig_shape), aux

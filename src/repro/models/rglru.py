@@ -1,0 +1,90 @@
+"""RecurrentGemma recurrent block (RG-LRU + temporal conv branch).
+
+PEFT adaptation mirrors the SSM case: a learned initial recurrent state per
+recurrent layer (``adapters['state0']``) is the prompt module; LoRA applies
+to the in/out projections. The RG-LRU scan dispatches through kernels/ops.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.models.ssm import _conv1d_causal
+from repro.sharding.rules import ParamSpec, shard
+
+
+def rglru_spec(cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width
+    dc = cfg.hybrid.conv_width
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_x": ParamSpec((d, w), dt, ("fsdp", "lru"), init="scaled"),
+        "in_y": ParamSpec((d, w), dt, ("fsdp", "lru"), init="scaled"),
+        "conv_w": ParamSpec((dc, w), dt, ("conv", "lru"), init="scaled"),
+        "conv_b": ParamSpec((w,), dt, ("lru",), init="zeros"),
+        "w_r": ParamSpec((w, w), dt, ("lru", None), init="scaled"),
+        "w_i": ParamSpec((w, w), dt, ("lru", None), init="scaled"),
+        "a_param": ParamSpec((w,), jnp.float32, ("lru",), init="ones"),
+        "out": ParamSpec((w, d), dt, ("lru", "fsdp"), init="scaled"),
+    }
+
+
+def rglru_state0_spec(cfg: ModelConfig, layers: int) -> ParamSpec:
+    return ParamSpec((layers, cfg.lru_width), jnp.float32, (None, "lru"),
+                     init="zeros")
+
+
+def rglru_seq(params: dict, adapters: Optional[dict], x: jax.Array,
+              cfg: ModelConfig, *, make_cache: bool = False):
+    """Full-sequence recurrent block. x: (B, S, d)."""
+    B, S, _ = x.shape
+    xb = x @ params["in_x"]
+    yb = jax.nn.gelu(x @ params["in_y"])
+    xb = shard(xb, "batch", "attn_seq", "lru")
+    xc = _conv1d_causal(xb, params["conv_w"], params["conv_b"])
+    r_gate = xc @ params["w_r"]
+    i_gate = xc @ params["w_i"]
+    h0 = None
+    if adapters is not None and "state0" in adapters:
+        h0 = jnp.broadcast_to(adapters["state0"][None], (B, cfg.lru_width))
+    hs, hT = kops.rglru(xc, r_gate, i_gate, params["a_param"], h0)
+    out = (hs * yb) @ params["out"]
+    out = shard(out, "batch", "seq", "d_model")
+    cache = None
+    if make_cache:
+        K = cfg.hybrid.conv_width
+        conv_tail = xb[:, -(K - 1):] if S >= K - 1 else jnp.pad(
+            xb, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        cache = {"h": hT, "conv": conv_tail}
+    return out, cache
+
+
+def rglru_decode(params: dict, adapters: Optional[dict], x: jax.Array,
+                 cache: dict, cfg: ModelConfig):
+    """Single-token step. cache: {'h': (B, W), 'conv': (B, K-1, W)}."""
+    xb = x @ params["in_x"]                                # (B, 1, W)
+    yb = jax.nn.gelu(x @ params["in_y"])
+    conv_in = jnp.concatenate([cache["conv"], xb], axis=1)
+    w = params["conv_w"]
+    xc = jnp.einsum("bkd,kd->bd", conv_in.astype(jnp.float32),
+                    w.astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xc = xc.astype(x.dtype)
+    r_gate = xc @ params["w_r"]
+    i_gate = xc @ params["w_i"]
+    y, h = kops.rglru_step(xc, r_gate, i_gate, params["a_param"], cache["h"])
+    out = (y[:, None] * yb) @ params["out"]
+    return out, {"h": h, "conv": conv_in[:, 1:]}
+
+
+def rglru_cache_spec(cfg: ModelConfig, batch: int, layers: int) -> dict:
+    w, K = cfg.lru_width, cfg.hybrid.conv_width
+    return {
+        "h": ParamSpec((layers, batch, w), jnp.float32,
+                       (None, "batch", "lru"), init="zeros"),
+        "conv": ParamSpec((layers, batch, K - 1, w), jnp.dtype(cfg.dtype),
+                          (None, "batch", "conv", "lru"), init="zeros"),
+    }

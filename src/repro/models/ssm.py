@@ -1,0 +1,121 @@
+"""Mamba-1 SSM block (falcon-mamba family).
+
+The paper's per-layer prompt module has no attention analogue here
+(DESIGN.md §5): the PEFT adaptation is a *learned initial SSM state* per
+layer (``adapters['state0']``) plus LoRA on the in/out projections. The
+selective scan itself dispatches through kernels/ops.py (Pallas on TPU).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops as kops
+from repro.sharding.rules import ParamSpec, shard
+
+
+def ssm_spec(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    ds, dc, dr = cfg.ssm.d_state, cfg.ssm.d_conv, cfg.dt_rank
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), dt, ("fsdp", "d_inner"), init="scaled"),
+        "conv_w": ParamSpec((dc, di), dt, ("conv", "d_inner"), init="scaled"),
+        "conv_b": ParamSpec((di,), dt, ("d_inner",), init="zeros"),
+        "x_proj": ParamSpec((di, dr + 2 * ds), dt, ("d_inner", None), init="scaled"),
+        "dt_proj_w": ParamSpec((dr, di), dt, (None, "d_inner"), init="scaled"),
+        "dt_proj_b": ParamSpec((di,), jnp.float32, ("d_inner",), init="ones"),
+        "A_log": ParamSpec((di, ds), jnp.float32, ("d_inner", "state"), init="ones"),
+        "D": ParamSpec((di,), jnp.float32, ("d_inner",), init="ones"),
+        "out_proj": ParamSpec((di, d), dt, ("d_inner", "fsdp"), init="scaled"),
+    }
+
+
+def state0_spec(cfg: ModelConfig, layers: int) -> ParamSpec:
+    """PEFT state prompt: learned initial state per layer."""
+    return ParamSpec((layers, cfg.d_inner, cfg.ssm.d_state), jnp.float32,
+                     (None, "d_inner", "state"), init="zeros")
+
+
+def _conv1d_causal(x: jax.Array, w: jax.Array, b: jax.Array,
+                   init: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, Di); w: (K, Di). init: (B, K-1, Di)."""
+    K = w.shape[0]
+    pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype) if init is None else init
+    xp = jnp.concatenate([pad.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):                                    # K=4: unrolled taps
+        out = out + xp[:, i:i + x.shape[1]].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _ssm_inputs(params, x, cfg: ModelConfig):
+    dr, ds = cfg.dt_rank, cfg.ssm.d_state
+    xdbc = x @ params["x_proj"]
+    dt_r, Bm, C = jnp.split(xdbc, [dr, dr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r @ params["dt_proj_w"]
+                         + params["dt_proj_b"].astype(dt_r.dtype))
+    A = -jnp.exp(params["A_log"])
+    return dt, A, Bm, C
+
+
+def ssm_seq(params: dict, adapters: Optional[dict], x: jax.Array,
+            cfg: ModelConfig, *, make_cache: bool = False):
+    """Full-sequence Mamba block. x: (B, S, d). Returns (y, cache or None)."""
+    B, S, _ = x.shape
+    di = cfg.d_inner
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard(xin, "batch", "attn_seq", "d_inner")
+    xc = jax.nn.silu(_conv1d_causal(xin, params["conv_w"], params["conv_b"]))
+    dt, A, Bm, C = _ssm_inputs(params, xc, cfg)
+    h0 = None
+    if adapters is not None and "state0" in adapters:
+        h0 = jnp.broadcast_to(adapters["state0"][None],
+                              (B, di, cfg.ssm.d_state))
+    y, hT = kops.selective_scan(xc, dt, A, Bm, C, params["D"], h0)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    out = shard(out, "batch", "seq", "d_model")
+    cache = None
+    if make_cache:
+        K = cfg.ssm.d_conv
+        conv_tail = xin[:, -(K - 1):] if S >= K - 1 else jnp.pad(
+            xin, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        cache = {"h": hT, "conv": conv_tail}
+    return out, cache
+
+
+def ssm_decode(params: dict, adapters: Optional[dict], x: jax.Array,
+               cache: dict, cfg: ModelConfig):
+    """Single-token step. x: (B, 1, d); cache: {'h': (B,Di,N), 'conv': (B,K-1,Di)}."""
+    B = x.shape[0]
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                    # (B, 1, Di)
+    conv_in = jnp.concatenate([cache["conv"], xin], axis=1)
+    w = params["conv_w"]
+    xc = jnp.einsum("bkd,kd->bd", conv_in.astype(jnp.float32),
+                    w.astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(xc).astype(x.dtype)[:, None]          # (B, 1, Di)
+    dt, A, Bm, C = _ssm_inputs(params, xc, cfg)
+    y, h = kops.selective_scan_step(xc[:, 0], dt[:, 0], A, Bm[:, 0], C[:, 0],
+                                    params["D"], cache["h"])
+    y = (y[:, None] * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    return out, {"h": h, "conv": conv_in[:, 1:]}
+
+
+def ssm_cache_spec(cfg: ModelConfig, batch: int, layers: Optional[int] = None) -> dict:
+    L = layers if layers is not None else cfg.n_layers
+    di, ds, K = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "h": ParamSpec((L, batch, di, ds), jnp.float32,
+                       (None, "batch", "d_inner", "state"), init="zeros"),
+        "conv": ParamSpec((L, batch, K - 1, di), dt,
+                          (None, "batch", "conv", "d_inner"), init="zeros"),
+    }

@@ -1,0 +1,279 @@
+"""Decoder-stack assembly for all assigned families.
+
+A model is a list of *scan groups*. Each group is a repeating pattern of
+sub-layers (``kinds``) whose parameters are stacked along a leading dim and
+executed with ``jax.lax.scan`` — this keeps the HLO one-pattern-sized, which
+is what makes 512-way GSPMD compiles of 61..64-layer models tractable
+(DESIGN.md §7). Dense/MoE/SSM models are a single group; recurrentgemma is
+a scanned (rglru, rglru, attn) group plus an unrolled tail group.
+
+Sub-layer kinds: ``attn`` | ``moe`` (attention + MoE FFN) | ``ssm`` |
+``rglru`` (recurrent + gated-MLP sandwich, Griffin-style).
+
+PEFT adapters mirror the group structure and are scanned alongside the
+parameters; see core/peft.py for the trainable-subtree mechanics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import mlp, mlp_spec, rmsnorm, rmsnorm_spec
+from repro.models.moe import moe_apply, moe_spec
+from repro.sharding.rules import ParamSpec, shard
+
+
+# ---------------------------------------------------------------------------
+# Group layout per config
+# ---------------------------------------------------------------------------
+
+def groups_for(cfg: ModelConfig) -> list[tuple[str, tuple[str, ...], int]]:
+    """[(group_name, kinds, n_repeat)] — static model structure."""
+    if cfg.family == "ssm":
+        return [("g0", ("ssm",), cfg.n_layers)]
+    if cfg.family == "moe":
+        return [("g0", ("moe",), cfg.n_layers)]
+    if cfg.family == "hybrid":
+        pat = tuple(cfg.hybrid.pattern)
+        tail = tuple(cfg.hybrid.tail)
+        n = (cfg.n_layers - len(tail)) // len(pat)
+        out = [("g0", pat, n)]
+        if tail:
+            out.append(("tail", tail, 1))
+        return out
+    # dense / vlm / (audio decoder handled in encdec.py)
+    return [("g0", ("attn",), cfg.n_layers)]
+
+
+def attn_window(cfg: ModelConfig, kind: str) -> int:
+    if cfg.family == "hybrid":
+        return cfg.hybrid.window
+    if cfg.attn_variant == "sliding":
+        return cfg.sliding_window
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# Per-sublayer specs
+# ---------------------------------------------------------------------------
+
+def sublayer_spec(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    if kind == "ssm":
+        return {"ln1": rmsnorm_spec(d), "mix": ssm_mod.ssm_spec(cfg)}
+    if kind == "rglru":
+        return {"ln1": rmsnorm_spec(d), "mix": rglru_mod.rglru_spec(cfg),
+                "ln2": rmsnorm_spec(d), "mlp": mlp_spec(d, cfg.d_ff, jnp.dtype(cfg.dtype))}
+    if kind == "moe":
+        return {"ln1": rmsnorm_spec(d), "attn": attn_mod.attn_spec(cfg),
+                "ln2": rmsnorm_spec(d), "moe": moe_spec(cfg)}
+    assert kind == "attn", kind
+    return {"ln1": rmsnorm_spec(d), "attn": attn_mod.attn_spec(cfg),
+            "ln2": rmsnorm_spec(d), "mlp": mlp_spec(d, cfg.d_ff, jnp.dtype(cfg.dtype))}
+
+
+def sublayer_adapter_spec(cfg: ModelConfig, kind: str) -> dict:
+    """PEFT adapter spec for one sub-layer (DESIGN.md §5)."""
+    p = cfg.peft
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    out: dict = {}
+    if kind in ("attn", "moe"):
+        if p.n_prefix > 0:
+            out["prefix"] = {
+                "k": ParamSpec((p.n_prefix, nkv, hd), jnp.dtype(cfg.dtype),
+                               ("prefix", "kv_heads", "head_dim")),
+                "v": ParamSpec((p.n_prefix, nkv, hd), jnp.dtype(cfg.dtype),
+                               ("prefix", "kv_heads", "head_dim")),
+            }
+        if p.lora_rank > 0:
+            lora = {}
+            dims = {"q": nh * hd, "k": nkv * hd, "v": nkv * hd, "o": nh * hd}
+            for t in p.lora_targets:
+                n_out = dims[t] if t != "o" else d
+                n_in = d if t != "o" else nh * hd
+                lora[t] = {
+                    "a": ParamSpec((n_in, p.lora_rank), jnp.dtype(cfg.dtype),
+                                   ("fsdp", "lora_rank"), init="scaled"),
+                    "b": ParamSpec((p.lora_rank, n_out), jnp.dtype(cfg.dtype),
+                                   ("lora_rank", None), init="zeros"),
+                }
+            out["lora"] = lora
+    elif kind == "ssm" and p.state_prompt:
+        out["state0"] = ParamSpec((cfg.d_inner, cfg.ssm.d_state), jnp.float32,
+                                  ("d_inner", "state"), init="zeros")
+    elif kind == "rglru" and p.state_prompt:
+        out["state0"] = ParamSpec((cfg.lru_width,), jnp.float32, ("lru",),
+                                  init="zeros")
+    return out
+
+
+def _stack(tree, n: int):
+    """Add a leading stacking dim of size n to every ParamSpec."""
+    def f(s: ParamSpec) -> ParamSpec:
+        axes = (None, *s.axes) if s.axes else (None,) * (len(s.shape) + 1)
+        return ParamSpec((n, *s.shape), s.dtype, axes, init=s.init, scale=s.scale)
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_spec(cfg: ModelConfig) -> dict:
+    """Backbone layer-stack spec: {group: {sub_i: stacked spec}}."""
+    out = {}
+    for name, kinds, n in groups_for(cfg):
+        grp = {f"s{i}": sublayer_spec(cfg, k) for i, k in enumerate(kinds)}
+        out[name] = _stack(grp, n)
+    return out
+
+
+def adapter_stack_spec(cfg: ModelConfig) -> dict:
+    out = {}
+    for name, kinds, n in groups_for(cfg):
+        grp = {f"s{i}": sublayer_adapter_spec(cfg, k) for i, k in enumerate(kinds)}
+        out[name] = _stack(grp, n)
+    return out
+
+
+def cache_group_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Decode-cache spec mirroring the group structure."""
+    out = {}
+    for name, kinds, n in groups_for(cfg):
+        grp = {}
+        for i, k in enumerate(kinds):
+            if k in ("attn", "moe"):
+                w = attn_window(cfg, k)
+                grp[f"s{i}"] = attn_mod.cache_spec(cfg, batch, seq_len,
+                                                   window=w, layers=n)
+            elif k == "ssm":
+                grp[f"s{i}"] = ssm_mod.ssm_cache_spec(cfg, batch, layers=n)
+            elif k == "rglru":
+                grp[f"s{i}"] = rglru_mod.rglru_cache_spec(cfg, batch, layers=n)
+        out[name] = grp
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Sub-layer application
+# ---------------------------------------------------------------------------
+
+def _apply_seq(kind: str, p: dict, a: dict, x, cfg: ModelConfig, *,
+               positions, make_cache: bool, cache_len=None):
+    """Full-sequence sub-layer. Returns (x, cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind == "ssm":
+        h, cache = ssm_mod.ssm_seq(p["mix"], a, rmsnorm(p["ln1"], x), cfg,
+                                   make_cache=make_cache)
+        return x + h, cache, aux
+    if kind == "rglru":
+        h, cache = rglru_mod.rglru_seq(p["mix"], a, rmsnorm(p["ln1"], x), cfg,
+                                       make_cache=make_cache)
+        x = x + h
+        x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x))
+        return x, cache, aux
+    # attention-based
+    w = attn_window(cfg, kind)
+    h, cache = attn_mod.attention_seq(p["attn"], a, rmsnorm(p["ln1"], x), cfg,
+                                      positions=positions, window=w,
+                                      make_cache=make_cache,
+                                      cache_len=cache_len)
+    x = x + h
+    if kind == "moe":
+        h2, aux = moe_apply(p["moe"], rmsnorm(p["ln2"], x), cfg)
+    else:
+        h2 = mlp(p["mlp"], rmsnorm(p["ln2"], x))
+    return x + h2, cache, aux
+
+
+def _apply_decode(kind: str, p: dict, a: dict, x, cache, cfg: ModelConfig, *,
+                  pos):
+    if kind == "ssm":
+        h, cache = ssm_mod.ssm_decode(p["mix"], a, rmsnorm(p["ln1"], x), cache,
+                                      cfg)
+        return x + h, cache
+    if kind == "rglru":
+        h, cache = rglru_mod.rglru_decode(p["mix"], a, rmsnorm(p["ln1"], x),
+                                          cache, cfg)
+        x = x + h
+        return x + mlp(p["mlp"], rmsnorm(p["ln2"], x)), cache
+    w = attn_window(cfg, kind)
+    h, cache = attn_mod.attention_decode(p["attn"], a, rmsnorm(p["ln1"], x),
+                                         cache, cfg, pos=pos, window=w)
+    x = x + h
+    if kind == "moe":
+        h2, _ = moe_apply(p["moe"], rmsnorm(p["ln2"], x), cfg)
+    else:
+        h2 = mlp(p["mlp"], rmsnorm(p["ln2"], x))
+    return x + h2, cache
+
+
+# ---------------------------------------------------------------------------
+# Stack forward
+# ---------------------------------------------------------------------------
+
+def stack_seq(params: dict, adapters: dict, x: jax.Array, cfg: ModelConfig, *,
+              positions: jax.Array, make_cache: bool = False,
+              remat: bool = False, cache_len=None):
+    """Run all groups over a full sequence.
+
+    Returns (x, caches | None, aux_sum)."""
+    caches: dict = {}
+    aux_total = jnp.zeros((), jnp.float32)
+
+    for name, kinds, n in groups_for(cfg):
+        gp, ga = params[name], adapters.get(name, {})
+
+        def body(carry, layer):
+            x, aux = carry
+            lp, la = layer
+            lcaches = {}
+            for i, k in enumerate(kinds):
+                x, c, a_ = _apply_seq(k, lp[f"s{i}"], la.get(f"s{i}", {}), x,
+                                      cfg, positions=positions,
+                                      make_cache=make_cache,
+                                      cache_len=cache_len)
+                aux = aux + a_
+                if c is not None:
+                    lcaches[f"s{i}"] = c
+            return (x, aux), lcaches
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), gcache = jax.lax.scan(
+            body, (x, aux_total), (gp, ga if ga else _empty_like(gp, n)))
+        caches[name] = gcache
+    return x, (caches if make_cache else None), aux_total
+
+
+def stack_decode(params: dict, adapters: dict, x: jax.Array,
+                 caches: dict, cfg: ModelConfig, *, pos: jax.Array):
+    """Single-token step through all groups. Returns (x, new_caches)."""
+    new_caches: dict = {}
+    for name, kinds, n in groups_for(cfg):
+        gp, ga = params[name], adapters.get(name, {})
+        gc = caches[name]
+
+        def body(x, layer):
+            lp, la, lc = layer
+            new_lc = {}
+            for i, k in enumerate(kinds):
+                key = f"s{i}"
+                x, c = _apply_decode(k, lp[key], la.get(key, {}), x,
+                                     lc[key], cfg, pos=pos)
+                new_lc[key] = c
+            return x, new_lc
+
+        x, new_gc = jax.lax.scan(
+            body, x, (gp, ga if ga else _empty_like(gp, n), gc))
+        new_caches[name] = new_gc
+    return x, new_caches
+
+
+def _empty_like(gp, n: int):
+    """Zero-leaf pytree scannable alongside params when no adapters exist."""
+    return {}

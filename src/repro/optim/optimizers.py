@@ -1,0 +1,89 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+Optax-like (init, update) pairs over arbitrary pytrees. Under the paper's
+PEFT regime the optimizer only ever sees the ``adapters`` subtree, so state
+is adapter-sized (the point of parameter-efficient fine-tuning: optimizer
+memory ~ tunable params, not backbone).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]   # (grads, state, params) -> (updates, state)
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array],
+        momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        mu = _tmap(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        if momentum:
+            mu = _tmap(lambda m, g: momentum * m + g.astype(m.dtype),
+                       state["mu"], grads)
+            upd = _tmap(lambda m: (-lr_t * m), mu)
+            return upd, {"step": step, "mu": mu}
+        return _tmap(lambda g: -lr_t * g, grads), {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
+          b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2)
+                  * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype)
+
+        return _tmap(upd, m, v, params), {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return _tmap(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves)) if leaves else jnp.zeros(())
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return _tmap(lambda x: x * scale.astype(x.dtype), tree), n

@@ -1,0 +1,268 @@
+"""Logical-axis sharding rules.
+
+Single source of truth for parameter/activation layout:
+
+- every parameter is declared once as a :class:`ParamSpec` (shape, dtype,
+  logical axis names). From the spec tree we derive (a) initialized arrays,
+  (b) `jax.ShapeDtypeStruct` stand-ins for the no-allocation dry-run, and
+  (c) `PartitionSpec` trees for `jax.jit` in/out shardings.
+- activations are constrained in model code via :func:`shard` using the same
+  logical names, resolved against the active rule set.
+
+Rules map a logical axis name -> mesh axis (str), tuple of mesh axes, or
+``None`` (replicated). Rule sets are plain dicts so perf experiments can swap
+them per run (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+# Production rules for the ('pod', 'data', 'model') mesh. On the single-pod
+# ('data', 'model') mesh, the 'pod' axis name is simply absent and is dropped
+# when resolving (see _resolve).
+DEFAULT_RULES: dict[str, Any] = {
+    # activations
+    "batch": ("pod", "data"),
+    "cluster": ("pod", "data"),       # HFSL client-cluster axis (core/hfsl.py)
+    "seq": None,
+    "attn_seq": None,                 # seq dim *inside* mixers/MLPs: always
+                                      # replicated so SP reshards at entry
+    "kv_seq": "model",                # KV caches shard their seq dim (heads
+                                      # rarely divide 16); long_500k decode
+                                      # overrides to ('pod','data')
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "d_model": None,
+    "act_ff": "model",
+    "act_experts": "model",
+    # weights
+    "fsdp": ("pod", "data"),          # second weight dim, ZeRO-3 style
+    "moe_fsdp": ("pod", "data"),      # expert-weight d_model dim
+    "d_ff": "model",
+    "experts": "model",
+    "vocab": "model",
+    "d_inner": "model",
+    "state": None,
+    "conv": None,
+    "lru": "model",
+    "lora_rank": None,
+    "prefix": None,
+    "stage": "model",                 # SL pipeline stage axis (tests use a tiny mesh)
+    "frames": None,
+}
+
+
+def long_decode_rules() -> dict[str, Any]:
+    """batch=1 decode: shard the KV-cache sequence dim instead of batch."""
+    r = dict(DEFAULT_RULES)
+    r["batch"] = None
+    r["cluster"] = None
+    r["kv_seq"] = ("pod", "data")
+    return r
+
+
+def moe_serving_rules() -> dict[str, Any]:
+    """Inference-mode MoE sharding (EXPERIMENTS.md §Perf, kimi hillclimb).
+
+    Training FSDP-shards expert weights over (pod, data) — correct when the
+    all-gather amortizes over a big fwd+bwd, catastrophic for inference
+    (every prefill re-gathers ~2 TB of experts). Serving flips to static
+    expert parallelism: experts over `data` (384/16=24 per group), the
+    expert d_model dim over `model`; tokens all-to-all to the expert shards
+    (activation-sized traffic instead of weight-sized).
+    """
+    r = dict(DEFAULT_RULES)
+    r["experts"] = "data"
+    r["moe_fsdp"] = "model"
+    r["act_experts"] = "data"
+    return r
+
+
+def train_rules(family: str) -> dict[str, Any]:
+    """Per-family training rules (DESIGN.md §4 / EXPERIMENTS.md §Dry-run).
+
+    - attention families: Megatron-style sequence parallelism — the residual
+      stream shards its seq dim over `model`, bounding the remat carry
+      (seq/16 per chip) at the cost of gather/scatter at layer boundaries.
+    - recurrent families (ssm / hybrid): the time scan cannot shard seq, so
+      the *per-cluster batch* shards over `model` instead.
+    The inner `batch` rule is None in both cases when training under HFSL —
+    the leading `cluster` dim carries the (pod, data) sharding.
+    """
+    r = dict(DEFAULT_RULES)
+    r["batch"] = None
+    if family in ("ssm", "hybrid"):
+        r["batch"] = "model"
+    else:
+        r["seq"] = "model"
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Active context
+# ---------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+def _get() -> tuple[Optional[Mesh], Optional[dict]]:
+    return getattr(_ctx, "mesh", None), getattr(_ctx, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate (mesh, rules) for `shard()` constraints inside model code."""
+    prev = _get()
+    _ctx.mesh, _ctx.rules = mesh, (rules or DEFAULT_RULES)
+    try:
+        yield
+    finally:
+        _ctx.mesh, _ctx.rules = prev
+
+
+def _resolve(axes: Sequence[Optional[str]], rules: dict, mesh: Mesh) -> P:
+    """Logical axis names -> PartitionSpec.
+
+    Mesh axes absent from the mesh are dropped; a mesh axis may appear only
+    once per spec (earlier logical axes win — e.g. with sequence parallelism
+    `seq` takes `model` and `heads` degrades to replicated)."""
+    out = []
+    used: set = set()
+    for name in axes:
+        tgt = rules.get(name) if name is not None else None
+        if tgt is None:
+            out.append(None)
+            continue
+        tgt_t = (tgt,) if isinstance(tgt, str) else tuple(tgt)
+        tgt_t = tuple(a for a in tgt_t
+                      if a in mesh.axis_names and a not in used)
+        used.update(tgt_t)
+        out.append(tgt_t if len(tgt_t) > 1 else (tgt_t[0] if tgt_t else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_for(axes: Sequence[Optional[str]], mesh: Mesh,
+             rules: Optional[dict] = None) -> P:
+    return _resolve(axes, rules or DEFAULT_RULES, mesh)
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Apply a with_sharding_constraint by logical names (no-op w/o context)."""
+    mesh, rules = _get()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _resolve(axes, rules, mesh)))
+
+
+# ---------------------------------------------------------------------------
+# ParamSpec
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declaration of one parameter: shape + dtype + logical layout + init."""
+    shape: tuple[int, ...]
+    dtype: Any = jnp.bfloat16
+    axes: tuple[Optional[str], ...] = ()
+    init: str = "normal"              # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.axes) in (0, len(self.shape)), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_from_spec(key: jax.Array, tree) -> Any:
+    """Materialize a ParamSpec tree into initialized arrays."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, s.dtype))
+        elif s.init == "scaled":  # fan-in scaled normal
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            w = jax.random.normal(k, s.shape, jnp.float32) / np.sqrt(fan_in)
+            out.append(w.astype(s.dtype))
+        else:
+            w = jax.random.normal(k, s.shape, jnp.float32) * s.scale
+            out.append(w.astype(s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def shape_structs(tree) -> Any:
+    """ParamSpec tree -> ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree, is_leaf=_is_spec)
+
+
+def fit_spec(p: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop mesh axes whose product does not divide the dim size.
+
+    jit in/out shardings (unlike with_sharding_constraint) require exact
+    divisibility; e.g. 8 kv heads cannot shard over a 16-way `model` axis.
+    Tuples degrade gracefully: ('pod','data') -> ('pod',) -> None.
+    """
+    out = []
+    used: set = set()
+    for i, entry in enumerate(p):
+        if entry is None or i >= len(shape):
+            out.append(None if i >= len(shape) else entry)
+            continue
+        axes = [entry] if isinstance(entry, str) else list(entry)
+        axes = [a for a in axes if a not in used]   # an axis maps once
+
+        def prod(a):
+            n = 1
+            for x in a:
+                n *= mesh.shape[x]
+            return n
+        while axes and shape[i] % prod(axes) != 0:
+            axes.pop()
+        used.update(axes)
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def partition_specs(tree, mesh: Mesh, rules: Optional[dict] = None) -> Any:
+    """ParamSpec tree -> PartitionSpec tree for jit in/out shardings
+    (shape-aware: non-dividing axes are dropped per fit_spec)."""
+    r = rules or DEFAULT_RULES
+    return jax.tree.map(
+        lambda s: fit_spec(_resolve(s.axes, r, mesh), s.shape, mesh),
+        tree, is_leaf=_is_spec)
+
+
+def named_shardings(tree, mesh: Mesh, rules: Optional[dict] = None) -> Any:
+    return jax.tree.map(lambda p: NamedSharding(mesh, p),
+                        partition_specs(tree, mesh, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_bytes(tree) -> int:
+    leaves = jax.tree.leaves(tree, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves)

@@ -1,0 +1,51 @@
+"""Integrated fine-tune-or-infer runtime tests (paper §IV on real models)."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.integrated import IntegratedRuntime
+from repro.data.synthetic import ClassificationTask
+
+
+@pytest.fixture(scope="module")
+def runtime():
+    cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    cfg = cfg.with_(peft=dataclasses.replace(cfg.peft, head_dim_out=5))
+    tasks = {
+        "nlp": ClassificationTask(5, 64, 48, class_strength=0.6, seed=0),
+        "cv": ClassificationTask(5, 64, 48, class_strength=0.6, seed=7),
+    }
+    return IntegratedRuntime(cfg, tasks, n_clusters=2, steps_per_upgrade=15,
+                             serve_batch=32, seed=0)
+
+
+def test_upgrade_improves_accuracy(runtime):
+    before = runtime.domains["nlp"].accuracy
+    profit, cost = runtime.upgrade("nlp")
+    after = runtime.domains["nlp"].accuracy
+    assert profit == -runtime.upgrade_cost
+    assert after > before - 0.05            # fine-tuning helps (noise slack)
+    assert runtime.domains["nlp"].level == 1
+    assert cost.comm_bytes > 0
+
+
+def test_produce_books_accuracy_profit(runtime):
+    profit, cost = runtime.produce("cv")
+    assert 0.0 <= profit <= runtime.profit_scale
+    assert cost.latency_s > 0
+
+
+def test_scheduled_run_mixes_services(runtime):
+    demand = ["nlp", "nlp", "cv", "nlp", "nlp", "nlp"]
+    records = runtime.run(demand)
+    assert len(records) == len(demand)
+    actions = {r.action for r in records}
+    assert "produce" in actions             # serving happens
+    assert records[-1].cumulative == runtime.total_profit()
+    # upgraded domains end above their cold-start accuracy
+    for name, d in runtime.domains.items():
+        if d.level > 0:
+            assert d.accuracy >= 0.2        # at least chance after tuning

@@ -1,0 +1,162 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(42)
+
+
+def tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,T,Hq,Hkv,D", [
+    (1, 16, 16, 1, 1, 8),
+    (2, 48, 56, 4, 2, 32),          # GQA + prefix slots
+    (1, 64, 64, 4, 4, 64),
+    (2, 33, 40, 2, 1, 16),          # ragged (padding path)
+])
+@pytest.mark.parametrize("window", [0, 16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_flash_attention(B, S, T, Hq, Hkv, D, window, dtype, backend):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D), dtype)
+    n_p = T - S
+    q_pos = jnp.arange(S)
+    kv_pos = jnp.arange(T) - n_p
+    want = ref.attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos, window=window)
+    got = ops.flash_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                              window=window, block_q=16, block_kv=16,
+                              backend=backend)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 24, 2, 16))
+    k = jax.random.normal(ks[1], (2, 30, 2, 16))
+    v = jax.random.normal(ks[2], (2, 30, 2, 16))
+    qp, kp = jnp.arange(24), jnp.arange(30)
+    want = ref.attention(q, k, v, q_pos=qp, kv_pos=kp, causal=False)
+    for backend in ("xla", "interpret"):
+        got = ops.flash_attention(q, k, v, q_pos=qp, kv_pos=kp, causal=False,
+                                  block_q=8, block_kv=8, backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Selective scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,Di,N", [(1, 32, 128, 8), (2, 64, 256, 16),
+                                      (2, 128, 512, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_h0", [False, True])
+def test_selective_scan(B, S, Di, N, dtype, with_h0):
+    ks = jax.random.split(KEY, 6)
+    x = (jax.random.normal(ks[0], (B, S, Di)) * 0.5).astype(dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di))) * 0.1).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.3)
+    Bm = (jax.random.normal(ks[3], (B, S, N)) * 0.5).astype(dtype)
+    C = (jax.random.normal(ks[4], (B, S, N)) * 0.5).astype(dtype)
+    D = jnp.ones((Di,))
+    h0 = jax.random.normal(ks[5], (B, Di, N)) * 0.1 if with_h0 else None
+    y_ref, h_ref = ref.selective_scan(x, dt, A, Bm, C, D, h0)
+    y, h = ops.selective_scan(x, dt, A, Bm, C, D, h0, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_selective_scan_step_matches_seq():
+    """Decode step telescopes to the full scan."""
+    B, S, Di, N = 2, 8, 64, 8
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, Di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di))) * 0.2
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    D = jnp.ones((Di,))
+    y_ref, h_ref = ref.selective_scan(x, dt, A, Bm, C, D)
+    h = jnp.zeros((B, Di, N))
+    ys = []
+    for t in range(S):
+        y, h = ops.selective_scan_step(x[:, t], dt[:, t], A, Bm[:, t],
+                                       C[:, t], D, h)
+        ys.append(y)
+    np.testing.assert_allclose(np.stack(ys, 1), np.asarray(y_ref),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,W", [(1, 32, 128), (2, 64, 256), (2, 96, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rglru(B, S, W, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = (jax.random.normal(ks[0], (B, S, W)) * 0.5).astype(dtype)
+    r = jax.random.normal(ks[1], (B, S, W)).astype(dtype)
+    i = jax.random.normal(ks[2], (B, S, W)).astype(dtype)
+    a = jax.random.normal(ks[3], (W,))
+    h0 = jax.random.normal(ks[4], (B, W)) * 0.1
+    hs_ref, hT_ref = ref.rglru(x, r, i, a, h0)
+    hs, hT = ops.rglru(x, r, i, a, h0, backend="interpret")
+    np.testing.assert_allclose(np.asarray(hs, np.float32),
+                               np.asarray(hs_ref, np.float32), **tol(dtype))
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(hT_ref),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_rglru_step_matches_seq():
+    B, S, W = 2, 12, 64
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (B, S, W)) * 0.5
+    r = jax.random.normal(ks[1], (B, S, W))
+    i = jax.random.normal(ks[2], (B, S, W))
+    a = jax.random.normal(ks[3], (W,))
+    hs_ref, hT_ref = ref.rglru(x, r, i, a)
+    h = jnp.zeros((B, W))
+    for t in range(S):
+        y, h = ops.rglru_step(x[:, t], r[:, t], i[:, t], a, h)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hT_ref),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# LoRA matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N,r", [(32, 64, 48, 4), (100, 200, 300, 8),
+                                     (256, 512, 512, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_lora_matmul(M, K, N, r, dtype, with_bias):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    w = (jax.random.normal(ks[1], (K, N)) * 0.05).astype(dtype)
+    a = (jax.random.normal(ks[2], (K, r)) * 0.05).astype(dtype)
+    b = (jax.random.normal(ks[3], (r, N)) * 0.05).astype(dtype)
+    bias = jax.random.normal(ks[4], (N,)).astype(dtype) if with_bias else None
+    want = ref.lora_matmul(x, w, a, b, 2.0, bias)
+    got = ops.lora_matmul(x, w, a, b, 2.0, bias, backend="interpret")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol(dtype))

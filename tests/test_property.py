@@ -1,0 +1,213 @@
+"""Hypothesis property tests on system invariants."""
+import dataclasses
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import hfsl, scheduler
+from repro.data.noniid import dirichlet_partition, partition_by_classes
+from repro.kernels import ops, ref
+from repro.models.moe import capacity
+from repro.configs.base import MoEConfig, get_config
+from repro.sharding.rules import fit_spec
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+SETTINGS = dict(deadline=None, max_examples=20,
+                suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# Attention masking semantics
+# ---------------------------------------------------------------------------
+
+@given(S=st.integers(2, 24), n_p=st.integers(0, 6),
+       window=st.integers(0, 16))
+@settings(**SETTINGS)
+def test_visibility_mask_invariants(S, n_p, window):
+    q_pos = jnp.arange(S)
+    kv_pos = jnp.arange(S + n_p) - n_p
+    vis = np.asarray(ref.visibility_mask(q_pos, kv_pos, window))
+    # prefix slots always visible
+    assert vis[:, :n_p].all()
+    # causality: no future positions
+    for i in range(S):
+        for j in range(S):
+            if j > i:
+                assert not vis[i, n_p + j]
+    # window: nothing older than window
+    if window > 0:
+        for i in range(S):
+            for j in range(S):
+                if j <= i and (i - j) >= window:
+                    assert not vis[i, n_p + j]
+    # every row attends to at least its own position (or a prefix slot)
+    assert vis.any(axis=1).all()
+
+
+@given(B=st.integers(1, 2), S=st.sampled_from([8, 24]),
+       H=st.sampled_from([1, 2, 4]), kv_ratio=st.sampled_from([1, 2]),
+       window=st.sampled_from([0, 8]))
+@settings(**SETTINGS)
+def test_flash_equals_reference(B, S, H, kv_ratio, window):
+    Hkv = max(1, H // kv_ratio)
+    H = Hkv * kv_ratio
+    D = 16
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(S * H + B), 3)
+    q = jax.random.normal(k1, (B, S, H, D))
+    k = jax.random.normal(k2, (B, S, Hkv, D))
+    v = jax.random.normal(k3, (B, S, Hkv, D))
+    pos = jnp.arange(S)
+    want = ref.attention(q, k, v, q_pos=pos, kv_pos=pos, window=window)
+    got = ops.flash_attention(q, k, v, q_pos=pos, kv_pos=pos, window=window,
+                              block_q=8, block_kv=8, backend="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Selective scan: linearity in x (fixed gates) and state composition
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_selective_scan_linear_in_x(seed):
+    B, S, Di, N = 1, 8, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, Di))) * 0.2
+    A = -jnp.exp(jax.random.normal(ks[1], (Di, N)) * 0.3)
+    Bm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    C = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    D = jnp.zeros((Di,))
+    x1 = jax.random.normal(ks[4], (B, S, Di))
+    x2 = jax.random.normal(ks[5], (B, S, Di))
+    y1, _ = ref.selective_scan(x1, dt, A, Bm, C, D)
+    y2, _ = ref.selective_scan(x2, dt, A, Bm, C, D)
+    y12, _ = ref.selective_scan(x1 + x2, dt, A, Bm, C, D)
+    np.testing.assert_allclose(np.asarray(y12), np.asarray(y1 + y2),
+                               atol=1e-4, rtol=1e-3)
+
+
+@given(seed=st.integers(0, 100), split=st.integers(1, 7))
+@settings(**SETTINGS)
+def test_selective_scan_composes_over_time(seed, split):
+    """scan(x) == scan(x[t:], h0=scan(x[:t]).h) — the decode invariant."""
+    B, S, Di, N = 1, 8, 16, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = jax.random.normal(ks[0], (B, S, Di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, Di))) * 0.2
+    A = -jnp.exp(jax.random.normal(ks[2], (Di, N)) * 0.3)
+    Bm = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    C = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    D = jnp.ones((Di,))
+    y_all, h_all = ref.selective_scan(x, dt, A, Bm, C, D)
+    _, h1 = ref.selective_scan(x[:, :split], dt[:, :split], A, Bm[:, :split],
+                               C[:, :split], D)
+    y2, h2 = ref.selective_scan(x[:, split:], dt[:, split:], A, Bm[:, split:],
+                                C[:, split:], D, h0=h1)
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(h_all),
+                               atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(y2), np.asarray(y_all[:, split:]),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# HFSL FedAvg algebra
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(2, 6), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_fedavg_permutation_invariant(n, seed):
+    k = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(k, (n, 4, 3)),
+            "b": jax.random.normal(k, (n, 2))}
+    perm = jax.random.permutation(k, n)
+    avg1 = hfsl.fedavg(tree)
+    avg2 = hfsl.fedavg(jax.tree.map(lambda x: x[perm], tree))
+    for l1, l2 in zip(jax.tree.leaves(avg1), jax.tree.leaves(avg2)):
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: DP optimality
+# ---------------------------------------------------------------------------
+
+@given(demand=st.lists(st.integers(0, 2), min_size=3, max_size=8),
+       seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_mlcp_beats_any_random_policy(demand, seed):
+    env = scheduler.SchedulerEnv(demand=tuple(demand))
+    best = scheduler.total_profit(
+        scheduler.run_policy(env, scheduler.mlcp_policy(env)))
+    rand = scheduler.total_profit(
+        scheduler.run_policy(env, scheduler.rs_policy(env, seed)))
+    greedy = scheduler.total_profit(
+        scheduler.run_policy(env, scheduler.msip_policy(env)))
+    assert best >= rand and best >= greedy
+
+
+# ---------------------------------------------------------------------------
+# Data partitioners
+# ---------------------------------------------------------------------------
+
+@given(n_clients=st.integers(1, 6), cpc=st.integers(1, 5),
+       seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_class_partition_disjoint_and_class_limited(n_clients, cpc, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 5, size=300)
+    parts = partition_by_classes(labels, n_clients, cpc, seed=seed)
+    seen = set()
+    for p in parts:
+        assert len(set(p.tolist()) & seen) == 0       # disjoint
+        seen |= set(p.tolist())
+        if len(p):
+            assert len(np.unique(labels[p])) <= cpc   # class-limited
+
+
+@given(alpha=st.floats(0.05, 10.0), seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_dirichlet_partition_covers_everything(alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 4, size=200)
+    parts = dirichlet_partition(labels, 4, alpha, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == 200 and len(np.unique(allidx)) == 200
+
+
+# ---------------------------------------------------------------------------
+# MoE capacity + sharding fit
+# ---------------------------------------------------------------------------
+
+@given(T=st.integers(8, 4096))
+@settings(**SETTINGS)
+def test_capacity_bounds(T):
+    cfg = get_config("granite-moe-1b-a400m")
+    c = capacity(T, cfg)
+    m = cfg.moe
+    assert c * m.n_experts >= T * m.top_k        # cf>=1 => no forced drops
+    assert c % 8 == 0
+
+
+@given(dims=st.lists(st.sampled_from([1, 2, 7, 8, 16, 24, 32, 40, 128]),
+                     min_size=1, max_size=4))
+@settings(**SETTINGS)
+def test_fit_spec_always_divides(dims):
+    mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    cand = [None, "model", ("pod", "data"), "data"]
+    spec = P(*(cand[i % len(cand)] for i in range(len(dims))))
+    fitted = fit_spec(spec, tuple(dims), mesh)
+    for i, entry in enumerate(fitted):
+        if entry is None:
+            continue
+        axes = (entry,) if isinstance(entry, str) else entry
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        assert dims[i] % n == 0
+    flat = [a for e in fitted if e
+            for a in ((e,) if isinstance(e, str) else e)]
+    assert len(flat) == len(set(flat))           # no duplicate mesh axes

@@ -1,0 +1,51 @@
+"""int8 adapter transport: size and fidelity (beyond-paper edge optimization)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+from repro.configs.base import get_config
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _cfg():
+    cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    return cfg.with_(peft=dataclasses.replace(cfg.peft, head_dim_out=5))
+
+
+def test_quantized_smaller_than_fp(tmp_path):
+    cfg = _cfg()
+    params = M.init(cfg, KEY)
+    fp = ckpt.save_adapters(str(tmp_path / "fp"), params)
+    q8 = ckpt.save_adapters_quantized(str(tmp_path / "q8"), params)
+    assert q8 < fp * 0.6, (q8, fp)
+
+
+def test_quantized_roundtrip_preserves_predictions(tmp_path):
+    cfg = _cfg()
+    params = M.init(cfg, KEY)
+    # non-trivial adapters
+    params["adapters"] = jax.tree.map(
+        lambda x: x + 0.05 * jax.random.normal(KEY, x.shape, x.dtype),
+        params["adapters"])
+    p = str(tmp_path / "q8")
+    ckpt.save_adapters_quantized(p, params)
+    restored = ckpt.load_adapters_quantized(p, params)
+    # elementwise error bounded by the int8 step size per row
+    for a, b in zip(jax.tree.leaves(params["adapters"]),
+                    jax.tree.leaves(restored["adapters"])):
+        af = np.asarray(a, np.float32)
+        step = np.abs(af).max() / 127.0 + 1e-12
+        assert np.abs(af - np.asarray(b, np.float32)).max() <= step + 1e-6
+    # predictions survive quantization
+    batch = {"tokens": jax.random.randint(KEY, (8, 16), 0, cfg.vocab_size)}
+    la = M.classify(params, batch, cfg)
+    lb = M.classify(restored, batch, cfg)
+    agree = float(np.mean(np.argmax(np.asarray(la), -1)
+                          == np.argmax(np.asarray(lb), -1)))
+    assert agree >= 0.75, agree
