@@ -1,0 +1,92 @@
+"""Decode-path benchmark: per-token loop vs scan generation vs engine.
+
+Tracks the decode-throughput trajectory (BENCH json via benchmarks/run.py):
+
+- ``decode_loop``   — legacy per-token Python loop (one jitted dispatch +
+                      host round-trip per token).
+- ``decode_scan``   — single-dispatch ``generate_scan`` (prefill + lax.scan).
+- ``decode_engine`` — batched serving: a queue of ``--requests`` requests
+                      drained through fixed slots in scan-generation waves.
+
+Emits ``name,us_per_call,derived`` rows with tok/s, per-token latency, and
+the scan/loop speedup. Compile time is excluded (one warmup call per impl).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.launch.engine import DecodeEngine
+from repro.launch.serve import generate_loop
+from repro.models import model as M
+
+
+def _time(fn, iters: int = 3) -> float:
+    """Median-free mean wall time (s) after one warmup call."""
+    np.asarray(fn())                       # warmup: compile + first run
+    t0 = time.time()
+    for _ in range(iters):
+        np.asarray(fn())                   # host sync each call
+    return (time.time() - t0) / iters
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false",
+                    help="benchmark the full-size config (default: reduced)")
+    ap.set_defaults(reduced=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--iters", type=int, default=3)
+    # benchmarks/run.py imports main() with argv=None -> defaults (it must
+    # not see run.py's own CLI args); direct runs pass sys.argv[1:] below.
+    args = ap.parse_args([] if argv is None else argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().with_(dtype="float32")
+    key = jax.random.PRNGKey(0)
+    params = M.init(cfg, key)
+    B, S, gen = args.batch, args.prompt_len, args.gen
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                 dtype=jnp.int32)
+    ntok = B * gen
+
+    dt_loop = _time(lambda: generate_loop(params, cfg, prompts, gen=gen),
+                    args.iters)
+    emit("decode_loop", dt_loop * 1e6,
+         f"tok_s={ntok / dt_loop:.1f};ms_per_tok={dt_loop / gen * 1e3:.2f}")
+
+    dt_scan = _time(lambda: M.generate_scan(params, cfg, prompts, gen=gen),
+                    args.iters)
+    emit("decode_scan", dt_scan * 1e6,
+         f"tok_s={ntok / dt_scan:.1f};ms_per_tok={dt_scan / gen * 1e3:.2f};"
+         f"speedup_vs_loop={dt_loop / dt_scan:.2f}x")
+
+    engine = DecodeEngine(cfg, slots=B)
+    reqs = np.asarray(jax.random.randint(key, (args.requests, S), 0,
+                                         cfg.vocab_size, dtype=jnp.int32))
+    engine.serve(params, reqs, gen=gen)          # warmup waves
+    t0 = time.time()
+    _, stats = engine.serve(params, reqs, gen=gen)
+    dt_eng = time.time() - t0
+    emit("decode_engine", dt_eng * 1e6,
+         f"tok_s={stats.tok_per_s:.1f};requests={stats.requests};"
+         f"waves={stats.waves}")
+    return {"loop_s": dt_loop, "scan_s": dt_scan, "engine_s": dt_eng,
+            "speedup": dt_loop / dt_scan}
+
+
+if __name__ == "__main__":
+    import sys
+    out = main(sys.argv[1:])
+    print(f"# scan speedup vs loop: {out['speedup']:.2f}x")

@@ -1,0 +1,41 @@
+#!/usr/bin/env bash
+# One-command verify recipe: dev deps + tier-1 tests + kernel smoke.
+#
+#   bash scripts/ci.sh
+#
+# Mirrors what the ROADMAP calls tier-1 (`python -m pytest -x -q`) and adds
+# a fast interpret-mode Pallas smoke (flash attention + flash decode) so
+# kernel regressions surface even when the suite is filtered.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt \
+    || echo "[ci] pip install failed (offline?); using preinstalled deps"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+
+python -m pytest -x -q
+
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np
+from repro.kernels import ops, ref
+
+key = jax.random.PRNGKey(0)
+B, S, T, Hq, Hkv, D = 1, 16, 24, 4, 2, 32
+ks = jax.random.split(key, 3)
+q = jax.random.normal(ks[0], (B, S, Hq, D))
+k = jax.random.normal(ks[1], (B, T, Hkv, D))
+v = jax.random.normal(ks[2], (B, T, Hkv, D))
+qp, kp = jnp.arange(S), jnp.arange(T) - (T - S)
+want = ref.attention(q, k, v, q_pos=qp, kv_pos=kp)
+got = ops.flash_attention(q, k, v, q_pos=qp, kv_pos=kp, block_q=8,
+                          block_kv=8, backend="interpret")
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+want = ref.decode_attention(q[:, -1], k, v, q_pos=S - 1, kv_pos=kp)
+got = ops.flash_decode(q[:, -1], k, v, q_pos=S - 1, kv_pos=kp,
+                       backend="interpret")
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+print("[ci] interpret-mode kernel smoke OK")
+PY

@@ -54,19 +54,29 @@ class CostModel:
 
 @dataclasses.dataclass
 class RoundCost:
-    """The paper's metric set for one fine-tuning round / inference request."""
+    """The paper's metric set for one fine-tuning round / inference request.
+
+    ``tokens`` counts decode tokens served during the round (0 for
+    fine-tuning rounds); with ``latency_s`` it yields the measured serving
+    throughput (:attr:`tok_per_s`)."""
     latency_s: float
     compute_flops: float
     energy_j: float
     comm_bytes: int
     memory_bytes: int
+    tokens: int = 0
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens / self.latency_s if self.latency_s > 0 else 0.0
 
     def __add__(self, o: "RoundCost") -> "RoundCost":
         return RoundCost(self.latency_s + o.latency_s,
                          self.compute_flops + o.compute_flops,
                          self.energy_j + o.energy_j,
                          self.comm_bytes + o.comm_bytes,
-                         max(self.memory_bytes, o.memory_bytes))
+                         max(self.memory_bytes, o.memory_bytes),
+                         self.tokens + o.tokens)
 
 
 def sl_round_cost(trace: SLTrace, cm: CostModel, *,

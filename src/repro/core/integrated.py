@@ -10,8 +10,9 @@ against real models:
   adapters, paper Fig 3),
 - consumes a request stream (each round demands one domain, §IV-C's
   "one GAI service per round"),
-- on `produce`: serves the round's requests with the domain's adapters and
-  books profit proportional to measured accuracy,
+- on `produce`: serves the round's requests with the domain's adapters
+  through the batched decode engine (launch/engine.py, one engine call per
+  round) and books profit proportional to measured accuracy,
 - on `upgrade`: runs an HFSL fine-tuning round for the chosen domain
   (paying the cost), which raises that domain's future serving accuracy,
 - keeps the §III metric ledger (latency / compute / comm / energy) via
@@ -36,6 +37,7 @@ from repro.core.peft import tree_bytes
 from repro.core.scheduler import SchedulerEnv, mlcp_policy, run_policy
 from repro.data.noniid import partition_by_classes
 from repro.data.pipeline import cluster_batches
+from repro.launch.engine import DecodeEngine
 from repro.models import model as M
 from repro.optim.optimizers import adamw
 
@@ -65,7 +67,8 @@ class IntegratedRuntime:
 
     def __init__(self, cfg, tasks: dict, *, n_clusters: int = 2,
                  steps_per_upgrade: int = 20, batch: int = 16,
-                 serve_batch: int = 64, lr: float = 5e-3,
+                 serve_batch: int = 64, serve_gen: int = 4,
+                 serve_slots: int = 16, lr: float = 5e-3,
                  profit_scale: float = 100.0, upgrade_cost: float = 50.0,
                  cost_model: Optional[CostModel] = None, seed: int = 0):
         self.cfg = cfg
@@ -76,6 +79,11 @@ class IntegratedRuntime:
         self.upgrade_cost = upgrade_cost
         self.cm = cost_model or CostModel()
         self.serve_batch = serve_batch
+        self.serve_gen = serve_gen
+        # one engine for every domain: adapters are passed per call, so the
+        # compiled generate computation is shared across domains/rounds
+        self.engine = DecodeEngine(cfg, slots=min(serve_slots, serve_batch),
+                                   seed=seed)
         key = jax.random.PRNGKey(seed)
         params = M.init(cfg, key)
         self.backbone = params["backbone"]       # shared frozen FM
@@ -134,17 +142,31 @@ class IntegratedRuntime:
         return -self.upgrade_cost, cost
 
     def produce(self, domain: str) -> tuple[float, RoundCost]:
-        """Serve one batch of inference requests for `domain`."""
-        d = self.domains[domain]
+        """Serve one round of inference requests for `domain`.
+
+        The round's generative requests go through the batched decode
+        engine in ONE engine call (queue -> fixed slots -> fused
+        scan-generation waves); profit is booked from the domain head's
+        measured accuracy on the same requests. The RoundCost ledger
+        records the engine's measured serving latency and token count, so
+        ``cost.tok_per_s`` is the round's decode throughput.
+        """
         task = self.tasks[domain]
         reqs = task.dataset(self.serve_batch, seed=len(self.records) + 123)
+        params = self._params_for(domain)
         t0 = time.time()
-        logits = self._classify(self._params_for(domain),
+        _, stats = self.engine.serve(params, reqs["tokens"],
+                                     gen=self.serve_gen)
+        logits = self._classify(params,
                                 {k: jnp.asarray(v) for k, v in reqs.items()})
         acc = float(jnp.mean(jnp.argmax(logits, -1) == reqs["label"]))
-        nbytes = self.serve_batch * self.cfg.peft.head_dim_out * 4
-        cost = RoundCost(time.time() - t0, 0.0, self.cm.d2d.energy(nbytes),
-                         nbytes, 0)
+        # latency covers the whole round (engine waves + the accuracy
+        # forward); stats.wall_s is the pure decode-serving share
+        nbytes = self.serve_batch * (self.cfg.peft.head_dim_out * 4
+                                     + self.serve_gen * 4)
+        flops = 2.0 * self.cfg.active_param_count() * stats.tokens
+        cost = RoundCost(time.time() - t0, flops, self.cm.d2d.energy(nbytes),
+                         nbytes, 0, tokens=stats.tokens)
         return self.profit_scale * acc, cost
 
     # -- scheduling ----------------------------------------------------------

@@ -1,0 +1,137 @@
+"""Split-KV flash-decode Pallas kernel (TPU target).
+
+Decode attention: ONE query token per sequence attends to a length-T KV
+cache. The cache is orders of magnitude larger than the query, so the kernel
+is memory-bound and its only job is to stream K/V through VMEM exactly once.
+
+Grid: ``(B, Hkv, num_kv_chunks)`` — the KV-chunk dimension is innermost and
+sequential. Each step loads one ``(block_kv, D)`` K/V chunk and folds it into
+f32 online-softmax partials ``(acc, m, l)`` held in VMEM scratch that persist
+across the chunk dimension (the split-KV reduction); the normalized output is
+written on the last chunk. GQA is expressed in the index_maps: the
+``g = Hq // Hkv`` query heads sharing one KV head are stacked into the
+sublane dim of a single ``(g, D)`` q tile, so grouped queries ride along for
+free instead of duplicating KV reads per query head.
+
+Masking is position-based and length-aware (kernels/ref.py semantics):
+unwritten cache slots carry the ``+1e9`` sentinel position and are never
+visible — decode never reads garbage K/V even though the buffer is padded to
+``max_len``; prefix-KV slots carry negative positions and are always
+visible. ``q_pos`` may be per-row ``(B,)`` and ``kv_pos`` per-row ``(B, T)``
+so batch slots at different sequence positions (the serving engine's
+continuous-batching layout) share one kernel launch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale: float, causal: bool,
+            window: int, nk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)              # (g, Dp)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bkv, Dp)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qp = qpos_ref[0, 0]                                     # scalar position
+    kpos = kpos_ref[0, :][None, :]                          # (1, bkv)
+    vis = (kpos <= qp) if causal else (kpos < 10 ** 8)     # sentinel padding
+    if window and window > 0:
+        vis = jnp.logical_and(vis, (qp - kpos) < window)
+    vis = jnp.logical_or(vis, kpos < 0)                     # prefix slots
+    s = jnp.where(vis, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.max(s, axis=-1)[:, None]                    # (g, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                  # (g, bkv)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)[:, None]
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_new = acc_prev * alpha + pv
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(j == nk - 1)
+    def _done():
+        out = acc_new / jnp.maximum(l_new, 1e-30)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+def _pad(x, axis, mult, value=0):
+    n = x.shape[axis]
+    p = (-n) % mult
+    if p == 0:
+        return x
+    w = [(0, 0)] * x.ndim
+    w[axis] = (0, p)
+    return jnp.pad(x, w, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "causal", "scale", "block_kv", "interpret"))
+def flash_decode_pallas(q, k, v, *, q_pos, kv_pos, window: int = 0,
+                        causal: bool = True, scale: Optional[float] = None,
+                        block_kv: int = 256, interpret: bool = False):
+    """q: (B, Hq, D); k, v: (B, T, Hkv, D); q_pos: () or (B,);
+    kv_pos: (T,) or (B, T). Returns (B, Hq, D) in q.dtype."""
+    B, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    bkv = min(block_kv, T)
+
+    Dp = max(128, D + (-D) % 128)
+    qp4 = _pad(q.reshape(B, Hkv, g, D), 3, Dp)
+    kp = _pad(_pad(k, 1, bkv), 3, Dp)
+    vp = _pad(_pad(v, 1, bkv), 3, Dp)
+    qpos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (B,))[:, None]
+    kvpos = _pad(jnp.broadcast_to(jnp.asarray(kv_pos, jnp.int32), (B, T)),
+                 1, bkv, value=10 ** 9)                     # padding invisible
+    Tp = kp.shape[1]
+    nk = Tp // bkv
+
+    grid = (B, Hkv, nk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal,
+                          window=window, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, bkv), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1, 1, g, Dp), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, bkv, 1, Dp), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, bkv, 1, Dp), lambda b, h, j: (b, j, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, Dp), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, Dp), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpos, kvpos, qp4, kp, vp)
+    return out[..., :D].reshape(B, Hq, D)

@@ -202,6 +202,121 @@ def _flash_xla(q, k, v, *, q_pos, kv_pos, window, causal, scale,
 
 
 # ---------------------------------------------------------------------------
+# Flash decode (single-token attention against a padded KV cache)
+# ---------------------------------------------------------------------------
+
+_DECODE_BKV = 256                      # default split-KV chunk; perf knob
+
+
+def set_decode_block(bkv: int) -> None:
+    """Perf knob: flash-decode KV chunk size."""
+    global _DECODE_BKV
+    _DECODE_BKV = bkv
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 q_pos: jax.Array, kv_pos: jax.Array,
+                 prefix_k: Optional[jax.Array] = None,
+                 prefix_v: Optional[jax.Array] = None,
+                 window: int = 0, causal: bool = True,
+                 scale: Optional[float] = None,
+                 block_kv: Optional[int] = None,
+                 backend: Optional[str] = None) -> jax.Array:
+    """One decode token per sequence against a KV cache (+ prefix bank).
+
+    q: (B, Hq, D); k, v: (B, T, Hkv, D); q_pos: scalar or (B,);
+    kv_pos: (T,) or (B, T) cache-slot positions (``+1e9`` sentinel marks
+    unwritten slots — length-aware masking keeps them invisible).
+    prefix_k/v: (n_p, Hkv, D) or (B, n_p, Hkv, D) always-visible learned
+    slots (prefix-KV prompts; position < 0 in the shared semantics).
+    Returns (B, Hq, D) in q.dtype.
+    """
+    block_kv = block_kv or _DECODE_BKV
+    impl = _pick(backend)
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import flash_decode as fdk
+        B, T = k.shape[0], k.shape[1]
+        if prefix_k is not None:
+            pk, pv = _broadcast_prefix(prefix_k, prefix_v, B)
+            n_p = pk.shape[1]
+            k = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+            v = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+            kv_pos = jnp.concatenate(
+                [jnp.full((B, n_p), -1, jnp.int32),
+                 jnp.broadcast_to(jnp.asarray(kv_pos, jnp.int32), (B, T))],
+                axis=1)
+        return fdk.flash_decode_pallas(
+            q, k, v, q_pos=q_pos, kv_pos=kv_pos, window=window,
+            causal=causal, scale=scale, block_kv=block_kv,
+            interpret=(impl == "interpret"))
+    return _flash_decode_xla(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                             prefix_k=prefix_k, prefix_v=prefix_v,
+                             window=window, causal=causal, scale=scale)
+
+
+def _broadcast_prefix(prefix_k, prefix_v, B):
+    if prefix_k.ndim == 3:                       # (n_p, Hkv, D) -> batched
+        prefix_k = jnp.broadcast_to(prefix_k[None], (B, *prefix_k.shape))
+        prefix_v = jnp.broadcast_to(prefix_v[None], (B, *prefix_v.shape))
+    return prefix_k, prefix_v
+
+
+def _flash_decode_xla(q, k, v, *, q_pos, kv_pos, prefix_k, prefix_v,
+                      window, causal, scale):
+    """Decode attention in XLA: native-dtype dots with f32 accumulation.
+
+    Prefix-KV slots are attended SEPARATELY and merged with an
+    online-softmax combine (EXPERIMENTS.md §Perf d2): concatenating n_p
+    slots onto the seq-sharded cache misaligns its tiling and makes GSPMD
+    all-gather the whole cache every layer (measured: the dominant decode
+    traffic).
+    """
+    from repro.sharding.rules import shard
+
+    B, Hq, D = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.reshape(B, Hkv, g, D)
+    qp = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (B,))
+    kp = jnp.broadcast_to(jnp.asarray(kv_pos, jnp.int32), (B, T))
+    k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+
+    def scores(kk, prefix: bool):
+        """Masked scores against one KV bank (casting the cache to f32
+        before the dot doubles HBM traffic — keep native dtype)."""
+        s = jnp.einsum("bngd,btnd->bngt", qf, kk.astype(qf.dtype),
+                       preferred_element_type=jnp.float32) * scale
+        if prefix:
+            return s                              # always fully visible
+        vis = (kp <= qp[:, None]) if causal else (kp < 10 ** 8)
+        if window and window > 0:
+            vis = vis & ((qp[:, None] - kp) < window)
+        vis = vis | (kp < 0)
+        return jnp.where(vis[:, None, None, :], s, NEG_INF)
+
+    def pv(p, vv):
+        return jnp.einsum("bngt,btnd->bngd", p.astype(vv.dtype), vv,
+                          preferred_element_type=jnp.float32)
+
+    s_main = scores(k, prefix=False)              # (B, Hkv, g, T) sharded T
+    if prefix_k is not None:
+        pk, pvv = _broadcast_prefix(prefix_k, prefix_v, B)
+        s_pfx = scores(pk, prefix=True)           # (B, Hkv, g, n_p)
+        m = jnp.maximum(jnp.max(s_main, -1), jnp.max(s_pfx, -1))
+        e_main = jnp.exp(s_main - m[..., None])
+        e_pfx = jnp.exp(s_pfx - m[..., None])
+        l = jnp.sum(e_main, -1) + jnp.sum(e_pfx, -1)    # (B, Hkv, g)
+        denom = jnp.maximum(l, 1e-30)[..., None]
+        o = (pv(e_main, v) + pv(e_pfx, pvv.astype(v.dtype))) / denom
+    else:
+        p = jax.nn.softmax(s_main, axis=-1)
+        o = pv(p, v)
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Selective scan (Mamba-1)
 # ---------------------------------------------------------------------------
 

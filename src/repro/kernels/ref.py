@@ -28,7 +28,8 @@ def visibility_mask(q_pos: jax.Array, kv_pos: jax.Array,
     """(S, T) boolean visibility per the shared semantics above."""
     q = q_pos[:, None].astype(jnp.int32)
     k = kv_pos[None, :].astype(jnp.int32)
-    vis = (k <= q) if causal else jnp.ones((q.shape[0], k.shape[1]), bool)
+    vis = (k <= q) if causal else \
+        jnp.broadcast_to(k < 10 ** 8, (q.shape[0], k.shape[1]))  # hide sentinels
     if window and window > 0:
         vis = vis & ((q - k) < window)
     vis = vis | (k < 0)                     # prefix slots
@@ -56,6 +57,32 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bngst,btnd->bsngd", probs, v.astype(jnp.float32))
     return out.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     q_pos: jax.Array, kv_pos: jax.Array,
+                     window: int = 0, causal: bool = True,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Naive single-token decode attention against a (padded) KV cache.
+
+    q: (B, Hq, D) — one query token per sequence; k, v: (B, T, Hkv, D).
+    q_pos: scalar or (B,) absolute query positions; kv_pos: (T,) or (B, T)
+    cache-slot positions (shared masking semantics above: negative = prefix,
+    +LARGE sentinel = unwritten slot, never visible).
+    Returns (B, Hq, D) in q.dtype.
+    """
+    B, Hq, D = q.shape
+    T = k.shape[1]
+    qp = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (B,))
+    kp = jnp.broadcast_to(jnp.asarray(kv_pos, jnp.int32), (B, T))
+
+    def one(qb, kb, vb, qpb, kpb):
+        out = attention(qb[None, None], kb[None], vb[None],
+                        q_pos=qpb[None], kv_pos=kpb,
+                        window=window, causal=causal, scale=scale)
+        return out[0, 0]
+
+    return jax.vmap(one)(q, k, v, qp, kp)
 
 
 def selective_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,

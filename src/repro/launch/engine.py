@@ -1,0 +1,203 @@
+"""Batched decode-serving engine (continuous-batching-style, wave-scheduled).
+
+The integrated runtime's "task inference" rounds (paper §IV) are throughput
+bound: a round's profit is booked per served request, so requests must be
+packed onto the accelerator, not dispatched one by one. This engine is the
+serving layer between a request queue and the fused single-dispatch
+generator (:func:`repro.models.model.generate_scan`):
+
+- **Request queue**: ``submit()`` enqueues prompts with per-request
+  ``max_new_tokens``; ``run()`` drains the queue.
+- **Fixed batch slots**: requests are packed into a fixed number of slots
+  (``slots``) so every wave reuses the same compiled generate computation.
+  Partial waves are padded by replicating a live row; padded rows are
+  dropped on output.
+- **Per-slot position/length tracking**: each :class:`Slot` records the
+  request id, prompt length, and token budget; a wave groups
+  requests of equal prompt length (length-bucketed packing) so all slots in
+  a wave share cache positions and the whole wave is ONE jitted call —
+  prefill + scanned decode, flash-decode attention per step.
+- **Slot recycling**: when a slot's request completes its token budget the
+  slot is freed and refilled from the queue for the next wave.
+
+Throughput (tok/s), wave count, and wall latency are returned as
+:class:`EngineStats`; ``core/integrated.py::produce`` feeds them into the
+``RoundCost`` ledger.
+
+Modality-conditioned requests (vision/audio extras) carry their extras row
+with the request (``submit(..., extras={...})``): waves stack the rows in
+slot order, so each request stays bound to its own conditioning even when
+length-bucketing reorders the queue. Every request in one drain must agree
+on the extras keys (or carry none).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray                 # (S,) int32 prompt
+    max_new_tokens: int
+    extras: Optional[dict] = None      # per-request modality rows (no batch dim)
+
+
+@dataclasses.dataclass
+class Slot:
+    """One fixed batch slot; live fields track the resident request."""
+    uid: int = -1
+    prompt_len: int = 0
+    target: int = 0                    # requested new tokens
+    active: bool = False
+
+    def assign(self, req: Request) -> None:
+        self.uid, self.prompt_len = req.uid, len(req.tokens)
+        self.target = req.max_new_tokens
+        self.active = True
+
+    def recycle(self) -> None:
+        self.uid, self.prompt_len, self.target = -1, 0, 0
+        self.active = False
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray                 # (max_new_tokens,) generated tokens
+    latency_s: float                   # wall time of the serving wave
+    wave: int
+
+
+@dataclasses.dataclass
+class EngineStats:
+    requests: int = 0
+    waves: int = 0
+    tokens: int = 0                    # served (non-padding) tokens
+    wall_s: float = 0.0
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class DecodeEngine:
+    """Packs queued requests into fixed slots and serves them in waves."""
+
+    def __init__(self, cfg, *, slots: int = 8, greedy: bool = True,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.slots = slots
+        self.greedy = greedy
+        self.slot_table = [Slot() for _ in range(slots)]
+        self._queue: deque[Request] = deque()
+        self._uid = 0
+        self._key = jax.random.PRNGKey(seed)
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, tokens, max_new_tokens: int = 8,
+               extras: Optional[dict] = None) -> int:
+        """Enqueue one request; returns its uid. ``extras`` is one modality
+        row per key (e.g. ``{"vision_embeds": (n_vis, d)}`` — no batch dim);
+        it stays bound to this request across wave packing."""
+        uid = self._uid
+        self._uid += 1
+        self._queue.append(Request(uid, np.asarray(tokens, np.int32),
+                                   int(max_new_tokens), extras))
+        return uid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- serving ------------------------------------------------------------
+    def _pack_wave(self) -> list[Request]:
+        """Fill free slots with queued requests of one prompt-length bucket
+        (equal length => shared cache positions => one fused dispatch)."""
+        S = len(self._queue[0].tokens)
+        wave: list[Request] = []
+        deferred: deque[Request] = deque()
+        free = [s for s in self.slot_table if not s.active]
+        while self._queue and len(wave) < len(free):
+            req = self._queue.popleft()
+            if len(req.tokens) == S:
+                wave.append(req)
+                free[len(wave) - 1].assign(req)
+            else:
+                deferred.append(req)               # next bucket, keep order
+        self._queue.extendleft(reversed(deferred))
+        return wave
+
+    def _wave_extras(self, wave: list[Request]) -> Optional[dict]:
+        """Stack per-request extras rows in slot order (padding replicates
+        the last live row, mirroring the prompt padding)."""
+        if all(r.extras is None for r in wave):
+            return None
+        keys = {k for r in wave if r.extras for k in r.extras}
+        if any(r.extras is None or set(r.extras) != keys for r in wave):
+            raise ValueError("all requests in a drain must carry the same "
+                             f"extras keys ({sorted(keys)}) or none")
+        pad = self.slots - len(wave)
+        return {k: jnp.asarray(np.stack([np.asarray(r.extras[k])
+                                         for r in wave]
+                                        + [np.asarray(wave[-1].extras[k])] * pad))
+                for k in keys}
+
+    def run(self, params) -> tuple[list[Completion], EngineStats]:
+        """Drain the queue: pack -> one generate_scan dispatch per wave ->
+        recycle completed slots. Returns (completions, stats)."""
+        stats = EngineStats()
+        out: list[Completion] = []
+        t_all = time.time()
+        while self._queue:
+            wave = self._pack_wave()
+            gen = max(r.max_new_tokens for r in wave)
+            prompts = np.stack([r.tokens for r in wave])
+            if len(wave) < self.slots:             # pad: replicate a live row
+                fill = np.repeat(prompts[-1:], self.slots - len(wave), axis=0)
+                prompts = np.concatenate([prompts, fill], axis=0)
+            key = None
+            if not self.greedy:
+                self._key, key = jax.random.split(self._key)
+            t0 = time.time()
+            toks = M.generate_scan(params, self.cfg, jnp.asarray(prompts),
+                                   gen=gen,
+                                   extra_batch=self._wave_extras(wave),
+                                   greedy=self.greedy, key=key)
+            toks = np.asarray(toks)                # device sync = wave done
+            dt = time.time() - t0
+            for i, req in enumerate(wave):
+                slot = next(s for s in self.slot_table if s.uid == req.uid)
+                out.append(Completion(req.uid, toks[i, :req.max_new_tokens],
+                                      dt, stats.waves))
+                stats.tokens += req.max_new_tokens
+                slot.recycle()
+            stats.waves += 1
+            stats.requests += len(wave)
+        stats.wall_s = time.time() - t_all
+        return out, stats
+
+    def serve(self, params, prompts, *, gen: int,
+              extra_batch: Optional[dict] = None
+              ) -> tuple[np.ndarray, EngineStats]:
+        """Serve an (N, S) prompt batch in slot-sized waves.
+
+        One engine call per round: submits every row (with its
+        ``extra_batch`` row, leading dim N, if given), drains the queue, and
+        returns ((N, gen) tokens in submission order, stats)."""
+        prompts = np.asarray(prompts)
+        uids = [self.submit(p, gen,
+                            extras=None if extra_batch is None else
+                            {k: np.asarray(v[i]) for k, v in extra_batch.items()})
+                for i, p in enumerate(prompts)]
+        comps, stats = self.run(params)
+        by_uid = {c.uid: c.tokens for c in comps}
+        return np.stack([by_uid[u] for u in uids]), stats

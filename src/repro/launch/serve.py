@@ -1,13 +1,26 @@
 """Serving launcher: SL-based task inference with batched requests.
 
-Prefill + decode loop against a fine-tuned (adapter-loaded) model; the
+Prefill + decode against a fine-tuned (adapter-loaded) model; the
 parameter-efficient deployment path (§III-A.2): backbone weights are
 initialized locally (presumed synchronized), only adapters come from a
 checkpoint.
 
+Decode-engine architecture (fast path first):
+
+- ``--impl scan`` (default): :func:`repro.models.model.generate_scan` — the
+  whole request (prefill + ``gen`` decode steps) is ONE jitted dispatch; the
+  decode loop is a ``jax.lax.scan`` with the KV caches in the carry, and
+  each step's cache attention runs through the flash-decode kernel dispatch
+  (``kernels/ops.py::flash_decode``).
+- ``--impl engine``: the batched serving layer
+  (:mod:`repro.launch.engine`) — a continuous-batching-style request queue
+  packed into fixed batch slots, used by ``core/integrated.py::produce``.
+- ``--impl loop``: the legacy per-token Python loop (one host dispatch per
+  token), kept as the benchmark baseline (benchmarks/decode_bench.py).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch vit-edge --reduced \
-      --batch 4 --prompt-len 16 --gen 8 [--adapters ckpt.npz]
+      --batch 4 --prompt-len 16 --gen 8 [--adapters ckpt.npz] [--impl scan]
 """
 from __future__ import annotations
 
@@ -23,10 +36,13 @@ from repro.configs.base import get_config
 from repro.models import model as M
 
 
-def generate(params, cfg, prompts: jax.Array, *, gen: int,
-             extra_batch: dict | None = None, greedy: bool = True,
-             key=None):
-    """Batched greedy/sampled generation. prompts: (B, S)."""
+def generate_loop(params, cfg, prompts: jax.Array, *, gen: int,
+                  extra_batch: dict | None = None, greedy: bool = True,
+                  key=None):
+    """LEGACY batched generation: per-token Python loop, one jitted dispatch
+    per decode step. Superseded by :func:`repro.models.model.generate_scan`
+    (token-for-token identical output); kept as the decode benchmark
+    baseline. prompts: (B, S)."""
     B, S = prompts.shape
     n_vis = cfg.vlm.n_vis_tokens if cfg.family == "vlm" else 0
     batch = {"tokens": prompts, **(extra_batch or {})}
@@ -48,6 +64,14 @@ def generate(params, cfg, prompts: jax.Array, *, gen: int,
     return jnp.concatenate(out, axis=1)
 
 
+def generate(params, cfg, prompts: jax.Array, *, gen: int,
+             extra_batch: dict | None = None, greedy: bool = True,
+             key=None):
+    """Batched greedy/sampled generation (single-dispatch scan path)."""
+    return M.generate_scan(params, cfg, prompts, gen=gen,
+                           extra_batch=extra_batch, greedy=greedy, key=key)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="vit-edge")
@@ -58,6 +82,8 @@ def main(argv=None):
     ap.add_argument("--adapters", default=None)
     ap.add_argument("--requests", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--impl", choices=("scan", "loop", "engine"),
+                    default="scan")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -80,16 +106,33 @@ def main(argv=None):
             (args.batch, cfg.audio.n_audio_frames, cfg.d_model),
             jnp.dtype(cfg.dtype))}
 
+    if args.impl == "engine":
+        from repro.launch.engine import DecodeEngine
+        engine = DecodeEngine(cfg, slots=args.batch)
+        for r in range(args.requests):
+            key, sub = jax.random.split(key)
+            prompts = jax.random.randint(sub, (args.batch, args.prompt_len),
+                                         0, cfg.vocab_size, dtype=jnp.int32)
+            toks, stats = engine.serve(params, np.asarray(prompts),
+                                       gen=args.gen, extra_batch=extra)
+            print(f"[serve] round {r}: {stats.requests} requests, "
+                  f"{stats.tokens} tokens in {stats.wall_s:.2f}s "
+                  f"({stats.tok_per_s:.1f} tok/s, {stats.waves} waves); "
+                  f"first row: {toks[0][:8]}")
+        return
+
+    gen_fn = generate if args.impl == "scan" else generate_loop
     for r in range(args.requests):
         key, sub = jax.random.split(key)
         prompts = jax.random.randint(sub, (args.batch, args.prompt_len), 0,
                                      cfg.vocab_size, dtype=jnp.int32)
         t0 = time.time()
-        toks = generate(params, cfg, prompts, gen=args.gen, extra_batch=extra)
+        toks = gen_fn(params, cfg, prompts, gen=args.gen, extra_batch=extra)
+        toks = np.asarray(toks)
         dt = time.time() - t0
         tps = args.batch * args.gen / dt
         print(f"[serve] request {r}: generated {toks.shape} in {dt:.2f}s "
-              f"({tps:.1f} tok/s); first row: {np.asarray(toks[0])[:8]}")
+              f"({tps:.1f} tok/s); first row: {toks[0][:8]}")
 
 
 if __name__ == "__main__":

@@ -9,8 +9,10 @@ Modes:
 - train/prefill: full-sequence blocked flash attention (kernels/ops.py);
   prefill additionally returns the layer KV cache (rolling window buffer for
   the sliding variant).
-- decode: single-token einsum attention against the cache; the cache is
-  updated in place at ``pos`` (or slot ``pos % window`` for sliding).
+- decode: single-token flash-decode attention against the cache
+  (kernels/ops.py::flash_decode — split-KV Pallas kernel on TPU, blocked
+  XLA online-softmax elsewhere); the cache is updated in place at ``pos``
+  (or slot ``pos % window`` for sliding).
 """
 from __future__ import annotations
 
@@ -23,8 +25,6 @@ from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
 from repro.models.layers import rope
 from repro.sharding.rules import ParamSpec, shard
-
-NEG_INF = -1e30
 
 
 # ---------------------------------------------------------------------------
@@ -192,46 +192,18 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
     k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
     v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
 
-    g = nh // nkv
-    qf = q.reshape(B, 1, nkv, g, hd)
-    qp = pos.astype(jnp.int32)
-
-    def scores(kk, poss, prefix: bool):
-        """Masked scores against one KV bank (native dtype, f32 accum —
-        casting the cache to f32 before the dot doubles HBM traffic)."""
-        s = jnp.einsum("bsngd,btnd->bngst", qf, kk.astype(qf.dtype),
-                       preferred_element_type=jnp.float32) * (hd ** -0.5)
-        if prefix or cross:
-            return s                                  # always fully visible
-        vis = poss <= qp
-        if window and window > 0:
-            vis = vis & ((qp - poss) < window)
-        return jnp.where(vis[None, None, None, None, :], s, NEG_INF)
-
-    # Prefix-KV slots are attended SEPARATELY and merged with an
-    # online-softmax combine (§Perf d2): concatenating n_p slots onto the
-    # seq-sharded cache misaligns its tiling and makes GSPMD all-gather the
-    # whole cache every layer (measured: the dominant decode traffic).
-    s_main = scores(k, kv_pos, prefix=False)          # (B,n,g,1,T) sharded T
+    # Single-token attention is kernel-dispatched: the XLA path keeps the
+    # separate prefix bank + online-softmax merge (§Perf d2 — concatenating
+    # prefix slots onto the seq-sharded cache forces a per-layer all-gather),
+    # the Pallas path is the split-KV flash-decode kernel
+    # (kernels/flash_decode.py) with length-aware sentinel masking.
     pfx = (adapters or {}).get("prefix") if not cross else None
-
-    def pv(p, vv):
-        return jnp.einsum("bngst,btnd->bsngd", p.astype(vv.dtype), vv,
-                          preferred_element_type=jnp.float32)
-
-    if pfx is not None:
-        pk = jnp.broadcast_to(pfx["k"][None], (B, *pfx["k"].shape))
-        pvv = jnp.broadcast_to(pfx["v"][None], (B, *pfx["v"].shape))
-        s_pfx = scores(pk, None, prefix=True)         # (B,n,g,1,n_p)
-        m = jnp.maximum(jnp.max(s_main, -1), jnp.max(s_pfx, -1))
-        e_main = jnp.exp(s_main - m[..., None])
-        e_pfx = jnp.exp(s_pfx - m[..., None])
-        l = jnp.sum(e_main, -1) + jnp.sum(e_pfx, -1)     # (B, n, g, 1)
-        denom = jnp.maximum(l, 1e-30).transpose(0, 3, 1, 2)[..., None]
-        o = (pv(e_main, v) + pv(e_pfx, pvv.astype(v.dtype))) / denom
-    else:
-        p = jax.nn.softmax(s_main, axis=-1)
-        o = pv(p, v)
+    o = kops.flash_decode(
+        q[:, 0], k, v, q_pos=pos.astype(jnp.int32),
+        kv_pos=kv_pos.astype(jnp.int32),
+        prefix_k=None if pfx is None else pfx["k"],
+        prefix_v=None if pfx is None else pfx["v"],
+        window=0 if cross else window, causal=not cross)
     o = o.reshape(B, 1, nh * hd).astype(x.dtype)
     y = _proj(o, params["wo"], None, lora.get("o"), lscale)
     return y, new_cache

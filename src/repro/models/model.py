@@ -7,6 +7,7 @@ core/hfsl.py operate on this split.
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Optional
 
 import jax
@@ -197,6 +198,60 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig,
     x = rmsnorm(params["backbone"]["final_norm"], x[:, -1:])
     head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
     return unembed(head_tbl, x), caches
+
+
+@functools.lru_cache(maxsize=64)
+def _generate_fn(cfg: ModelConfig, gen: int, greedy: bool):
+    """Build + jit the fused prefill-and-scan generator for one config.
+
+    The whole request — prefill, ``gen`` decode steps, sampling — is ONE
+    jitted computation: the decode loop is a ``jax.lax.scan`` whose carry
+    (token, caches, key) stays on device, so XLA donates the cache buffers
+    step-to-step and the host dispatches once per request instead of once
+    per token. Cached per (cfg, gen, greedy); jit re-specializes per input
+    shape as usual.
+    """
+
+    def impl(params: dict, batch: dict, key: jax.Array) -> jax.Array:
+        S = batch["tokens"].shape[1]
+        n_vis = cfg.vlm.n_vis_tokens if cfg.family == "vlm" else 0
+        logits, caches = prefill(params, batch, cfg, max_len=S + n_vis + gen)
+        tok0 = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+        def step(carry, i):
+            tok, caches, key = carry
+            pos = jnp.asarray(S + n_vis, jnp.int32) + i
+            logits, caches = decode_step(params, tok, caches, pos, cfg)
+            if greedy:
+                nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits[:, -1])[:, None]
+            return (nxt.astype(jnp.int32), caches, key), tok
+
+        (_, _, _), toks = jax.lax.scan(
+            step, (tok0, caches, key), jnp.arange(gen, dtype=jnp.int32))
+        return jnp.swapaxes(toks[..., 0], 0, 1)            # (B, gen)
+
+    return jax.jit(impl)
+
+
+def generate_scan(params: dict, cfg: ModelConfig, prompts: jax.Array, *,
+                  gen: int, extra_batch: Optional[dict] = None,
+                  greedy: bool = True,
+                  key: Optional[jax.Array] = None) -> jax.Array:
+    """Single-dispatch generation: prefill + scanned decode in one jit call.
+
+    prompts: (B, S) int32. Returns (B, gen) generated tokens. Matches the
+    legacy per-token loop (launch/serve.py::generate_loop) token-for-token:
+    the first emitted token is the prefill argmax, subsequent tokens are
+    argmax (greedy) or categorical samples drawn with the same per-step key
+    splits.
+    """
+    batch = {"tokens": prompts, **(extra_batch or {})}
+    if greedy or key is None:
+        greedy, key = True, jax.random.PRNGKey(0)          # key unused
+    return _generate_fn(cfg, int(gen), bool(greedy))(params, batch, key)
 
 
 def decode_step(params: dict, token: jax.Array, caches: dict,

@@ -1,4 +1,6 @@
-"""Serving-path invariant: prefill + decode == teacher-forced full forward."""
+"""Serving-path invariants: prefill + decode == teacher-forced full forward;
+scan generation == legacy per-token loop; flash-decode kernel == dense
+cache-attention oracle."""
 import dataclasses
 
 import jax
@@ -7,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import get_config
+from repro.kernels import ops, ref
 from repro.models import model as M
 
 KEY = jax.random.PRNGKey(1)
@@ -90,3 +93,95 @@ def test_sliding_window_decode_rolls_over():
             np.asarray(logits),
             np.asarray(ref[:, n_vis + S + t:n_vis + S + t + 1]),
             atol=3e-4, rtol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# Single-dispatch scan generation vs the legacy per-token loop
+# ---------------------------------------------------------------------------
+
+def _gen_setup(arch, seed=5):
+    cfg = get_config(arch).reduced().with_(dtype="float32")
+    params = M.init(cfg, KEY)
+    key = jax.random.PRNGKey(seed)
+    prompts = jax.random.randint(key, (B, S), 0, cfg.vocab_size,
+                                 dtype=jnp.int32)
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"vision_embeds":
+                 jax.random.normal(key, (B, cfg.vlm.n_vis_tokens,
+                                         cfg.d_model)) * 0.1}
+    return cfg, params, prompts, extra
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "llava-next-mistral-7b"])
+def test_generate_scan_matches_loop_greedy(arch):
+    from repro.launch.serve import generate_loop
+    cfg, params, prompts, extra = _gen_setup(arch)
+    want = generate_loop(params, cfg, prompts, gen=6, extra_batch=extra)
+    got = M.generate_scan(params, cfg, prompts, gen=6, extra_batch=extra)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_generate_scan_matches_loop_sampled():
+    """Same key => identical samples (per-step key splits line up)."""
+    from repro.launch.serve import generate_loop
+    cfg, params, prompts, _ = _gen_setup("qwen2-7b")
+    key = jax.random.PRNGKey(11)
+    want = generate_loop(params, cfg, prompts, gen=8, greedy=False, key=key)
+    got = M.generate_scan(params, cfg, prompts, gen=8, greedy=False, key=key)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Flash-decode kernel vs dense cache-attention oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (4, 2), (4, 1)])   # MHA + GQA
+@pytest.mark.parametrize("window", [0, 8])
+@pytest.mark.parametrize("n_prefix", [0, 3])
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_flash_decode_matches_dense_reference(Hq, Hkv, window, n_prefix,
+                                              backend):
+    """Sweep causal / sliding-window / prefix-KV / GQA; the cache has
+    unwritten (+1e9 sentinel) slots that must never be read."""
+    Bq, T, D, written = 2, 40, 32, 30
+    ks = jax.random.split(jax.random.PRNGKey(Hq * 10 + window + n_prefix), 5)
+    q = jax.random.normal(ks[0], (Bq, Hq, D))
+    k = jax.random.normal(ks[1], (Bq, T, Hkv, D))
+    v = jax.random.normal(ks[2], (Bq, T, Hkv, D))
+    kv_pos = jnp.where(jnp.arange(T) < written, jnp.arange(T), 10 ** 9)
+    q_pos = jnp.asarray([written - 1, written - 8])      # per-row positions
+    pk = pv = None
+    kcat, vcat, pcat = k, v, kv_pos
+    if n_prefix:
+        pk = jax.random.normal(ks[3], (n_prefix, Hkv, D))
+        pv = jax.random.normal(ks[4], (n_prefix, Hkv, D))
+        kcat = jnp.concatenate(
+            [jnp.broadcast_to(pk[None], (Bq, n_prefix, Hkv, D)), k], axis=1)
+        vcat = jnp.concatenate(
+            [jnp.broadcast_to(pv[None], (Bq, n_prefix, Hkv, D)), v], axis=1)
+        pcat = jnp.concatenate([jnp.full((n_prefix,), -1), kv_pos])
+    want = ref.decode_attention(q, kcat, vcat, q_pos=q_pos, kv_pos=pcat,
+                                window=window)
+    got = ops.flash_decode(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                           prefix_k=pk, prefix_v=pv, window=window,
+                           block_kv=16, backend=backend)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_flash_decode_noncausal_cross():
+    """Cross-attention decode (audio): every encoder slot visible."""
+    Bq, T, H, D = 2, 24, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (Bq, H, D))
+    k = jax.random.normal(ks[1], (Bq, T, H, D))
+    v = jax.random.normal(ks[2], (Bq, T, H, D))
+    kv_pos = jnp.arange(T)
+    want = ref.decode_attention(q, k, v, q_pos=5, kv_pos=kv_pos,
+                                causal=False)
+    for backend in ("xla", "interpret"):
+        got = ops.flash_decode(q, k, v, q_pos=5, kv_pos=kv_pos,
+                               causal=False, block_kv=8, backend=backend)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-3, rtol=1e-3)
