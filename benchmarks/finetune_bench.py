@@ -1,0 +1,125 @@
+"""Fine-tuning-path benchmark: per-step loop vs fused scanned round.
+
+The fine-tuning twin of decode_bench.py — tracks the second hot path's
+throughput trajectory (BENCH json via benchmarks/run.py):
+
+- ``finetune_loop`` — legacy per-step engine (one jitted dispatch + host
+                      batch assembly (data/pipeline.cluster_batches) +
+                      host->device copy per HFSL step).
+- ``finetune_scan`` — fused round engine: K steps in ONE ``lax.scan``
+                      dispatch over a device-resident BatchBank
+                      (hfsl.make_hfsl_round), in-scan FedAvg.
+
+The default ``engine`` profile shrinks the reduced config further (d=32) so
+per-step XLA execution is small and the measured gap is the *engine*
+overhead the refactor removes — on CPU a full reduced-config step costs
+10-20ms of kernel execution either way, which floors the ratio near 1; the
+``reduced`` profile reports that compute-bound regime honestly. Emits
+``name,us_per_call,derived`` rows with steps/s, examples/s, and the
+scan/loop speedup. Compile time is excluded (one warmup round per impl).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core import hfsl
+from repro.data.noniid import partition_by_classes
+from repro.data.pipeline import BatchBank, cluster_batches
+from repro.data.synthetic import ClassificationTask
+from repro.models import model as M
+from repro.optim.optimizers import adamw
+
+# per-profile (extra cfg shrink, clusters, batch, seq, steps)
+PROFILES = {
+    "engine": (dict(d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                    d_ff=64, vocab_size=32), 4, 1, 4, 40),
+    "reduced": ({}, 2, 8, 32, 20),
+}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vit-edge")
+    ap.add_argument("--profile", choices=tuple(PROFILES), default="engine",
+                    help="engine: tiny per-step compute isolates dispatch/"
+                         "copy overhead; reduced: stock reduced config "
+                         "(compute-bound on CPU)")
+    ap.add_argument("--clusters", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="HFSL steps per measured round")
+    ap.add_argument("--sync-every", type=int, default=5)
+    ap.add_argument("--iters", type=int, default=3)
+    # benchmarks/run.py imports main() with argv=None -> defaults (it must
+    # not see run.py's own CLI args); direct runs pass sys.argv[1:] below.
+    args = ap.parse_args([] if argv is None else argv)
+
+    shrink, n, batch, seq, K = PROFILES[args.profile]
+    n = args.clusters or n
+    batch = args.batch or batch
+    seq = args.seq or seq
+    K = args.steps or K
+
+    cfg = get_config(args.arch).reduced().with_(dtype="float32", **shrink)
+    if not cfg.peft.head_dim_out:
+        cfg = cfg.with_(peft=dataclasses.replace(cfg.peft, head_dim_out=5))
+    opt = adamw(5e-3)
+    state0 = hfsl.init_hfsl_state(jax.random.PRNGKey(0), cfg, n, opt, M.init)
+
+    task = ClassificationTask(cfg.peft.head_dim_out, cfg.vocab_size, seq,
+                              seed=0)
+    data = task.dataset(max(200, K * batch) * n, seed=1)
+    parts = partition_by_classes(data["label"], n, cfg.peft.head_dim_out,
+                                 seed=0)
+    bank = BatchBank.pack(data, parts, batch, seed=0, steps=K)
+    ex_per_round = K * n * batch
+
+    def time_rounds(fn) -> float:
+        jax.block_until_ready(fn())           # warmup: compile + first round
+        t0 = time.time()
+        for _ in range(args.iters):
+            jax.block_until_ready(fn())
+        return (time.time() - t0) / args.iters
+
+    # legacy engine exactly as launch/train.py --impl loop runs it: host
+    # batch assembly via the cluster iterator + one dispatch per step
+    step_fn = jax.jit(hfsl.make_hfsl_step(cfg, opt, M.classify_loss,
+                                          sync_every=args.sync_every))
+
+    def run_loop():
+        it = cluster_batches(data, parts, batch, seed=0)
+        s = state0
+        for _ in range(K):
+            s, _ = step_fn(s, next(it))
+        return s["adapters_c"]
+
+    dt_loop = time_rounds(run_loop)
+    emit("finetune_loop", dt_loop * 1e6,
+         f"steps_s={K / dt_loop:.2f};ex_s={ex_per_round / dt_loop:.1f}")
+
+    round_fn = hfsl.make_hfsl_round(cfg, opt, M.classify_loss, steps=K,
+                                    sync_every=args.sync_every)
+
+    def run_scan():
+        s, _ = round_fn(state0, bank.arrays, 0)
+        return s["adapters_c"]
+
+    dt_scan = time_rounds(run_scan)
+    emit("finetune_scan", dt_scan * 1e6,
+         f"steps_s={K / dt_scan:.2f};ex_s={ex_per_round / dt_scan:.1f};"
+         f"speedup_vs_loop={dt_loop / dt_scan:.2f}x")
+    return {"loop_s": dt_loop, "scan_s": dt_scan,
+            "speedup": dt_loop / dt_scan}
+
+
+if __name__ == "__main__":
+    import sys
+    out = main(sys.argv[1:])
+    print(f"# scan speedup vs loop: {out['speedup']:.2f}x")

@@ -31,8 +31,11 @@ rt = IntegratedRuntime(cfg, tasks, n_clusters=2, steps_per_upgrade=60,
 print(f"   cold-start accuracy: "
       f"{ {n: round(d.accuracy, 2) for n, d in rt.domains.items()} }")
 for r in rt.run(demand):
+    rate = (f"ex/s {r.cost.ex_per_s:7.1f}" if r.action == "upgrade"
+            else f"tok/s {r.cost.tok_per_s:6.1f}")
     print(f"   round {r.round:2d}: {r.action:8s} {r.domain:4s} "
-          f"profit {r.profit:+7.1f}  acc {r.accuracy:.2f}  cum {r.cumulative:8.1f}")
+          f"profit {r.profit:+7.1f}  acc {r.accuracy:.2f}  {rate}  "
+          f"cum {r.cumulative:8.1f}")
 print(f"   MLCP total: {rt.total_profit():.1f}")
 
 print("\n== MSIP (greedy): never fine-tunes ==")

@@ -4,8 +4,9 @@
 #   bash scripts/ci.sh
 #
 # Mirrors what the ROADMAP calls tier-1 (`python -m pytest -x -q`) and adds
-# a fast interpret-mode Pallas smoke (flash attention + flash decode) so
-# kernel regressions surface even when the suite is filtered.
+# a fast interpret-mode Pallas smoke (flash attention + flash decode +
+# trainable LoRA matmul fwd/bwd) so kernel regressions surface even when
+# the suite is filtered.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -37,5 +38,25 @@ want = ref.decode_attention(q[:, -1], k, v, q_pos=S - 1, kv_pos=kp)
 got = ops.flash_decode(q[:, -1], k, v, q_pos=S - 1, kv_pos=kp,
                        backend="interpret")
 np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
-print("[ci] interpret-mode kernel smoke OK")
+
+# trainable LoRA matmul: fused forward + custom-VJP adapter grads
+M_, K_, N_, r_ = 16, 32, 24, 4
+ks = jax.random.split(key, 5)
+x = jax.random.normal(ks[0], (M_, K_))
+w = jax.random.normal(ks[1], (K_, N_)) * 0.05
+a = jax.random.normal(ks[2], (K_, r_)) * 0.05
+b = jax.random.normal(ks[3], (r_, N_)) * 0.05
+dy = jax.random.normal(ks[4], (M_, N_))
+want = ref.lora_matmul(x, w, a, b, 2.0)
+got = ops.lora_matmul(x, w, a, b, 2.0, backend="interpret")
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           atol=1e-3, rtol=1e-3)
+f = lambda x_, a_, b_: jnp.vdot(
+    ops.lora_matmul(x_, w, a_, b_, 2.0, backend="interpret"), dy)
+dx, da, db = jax.grad(f, argnums=(0, 1, 2))(x, a, b)
+rdx, rda, rdb = ref.lora_matmul_bwd(x, w, a, b, 2.0, dy)
+for g, r in ((dx, rdx), (da, rda), (db, rdb)):
+    np.testing.assert_allclose(np.asarray(g), np.asarray(r),
+                               atol=1e-3, rtol=1e-3)
+print("[ci] interpret-mode kernel smoke OK (attn + decode + lora fwd/bwd)")
 PY

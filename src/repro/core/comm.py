@@ -58,17 +58,25 @@ class RoundCost:
 
     ``tokens`` counts decode tokens served during the round (0 for
     fine-tuning rounds); with ``latency_s`` it yields the measured serving
-    throughput (:attr:`tok_per_s`)."""
+    throughput (:attr:`tok_per_s`). ``examples`` mirrors it for the
+    fine-tuning service: training examples consumed during the round (0 for
+    serving rounds), yielding the measured fine-tuning throughput
+    (:attr:`ex_per_s`)."""
     latency_s: float
     compute_flops: float
     energy_j: float
     comm_bytes: int
     memory_bytes: int
     tokens: int = 0
+    examples: int = 0
 
     @property
     def tok_per_s(self) -> float:
         return self.tokens / self.latency_s if self.latency_s > 0 else 0.0
+
+    @property
+    def ex_per_s(self) -> float:
+        return self.examples / self.latency_s if self.latency_s > 0 else 0.0
 
     def __add__(self, o: "RoundCost") -> "RoundCost":
         return RoundCost(self.latency_s + o.latency_s,
@@ -76,7 +84,8 @@ class RoundCost:
                          self.energy_j + o.energy_j,
                          self.comm_bytes + o.comm_bytes,
                          max(self.memory_bytes, o.memory_bytes),
-                         self.tokens + o.tokens)
+                         self.tokens + o.tokens,
+                         self.examples + o.examples)
 
 
 def sl_round_cost(trace: SLTrace, cm: CostModel, *,

@@ -1,6 +1,6 @@
 """Hybrid Federated Split Learning trainer (paper §III-C, Fig 4).
 
-The paper's fine-tuning workflow maps onto the TPU mesh as (DESIGN.md §2):
+The paper's fine-tuning workflow maps onto the TPU mesh as follows:
 
 - **FL inter-cluster parallelism**: every index along the (`pod`, `data`)
   mesh axes is one fine-tuning client cluster. The tunable adapters carry a
@@ -17,6 +17,16 @@ The paper's fine-tuning workflow maps onto the TPU mesh as (DESIGN.md §2):
 
 With ``sync_every=1`` this degenerates to synchronous data-parallel PEFT;
 with one cluster it degenerates to SL, matching §III-C.1's remark.
+
+Two execution engines share one step body (:func:`_make_step_body`):
+
+- :func:`make_hfsl_step` — ONE step per call (legacy; one jitted dispatch +
+  host sync per step).
+- :func:`make_hfsl_round` — K steps in ONE jitted ``lax.scan`` dispatch, the
+  fine-tuning twin of models/model.py::generate_scan. FedAvg fires *inside*
+  the scan at ``sync_every`` boundaries of the carried step counter; batches
+  are gathered from a device-resident bank (data/pipeline.py::BatchBank) by
+  the scanned step index, so no host transfer happens inside a round.
 """
 from __future__ import annotations
 
@@ -105,40 +115,83 @@ def fedavg(adapters_c):
         adapters_c)
 
 
-def make_hfsl_step(cfg, optimizer: Optimizer, loss_fn: Callable, *,
-                   sync_every: int = 1, clip_norm: float = 0.0,
-                   always_sync: bool = False) -> Callable:
-    """Build the jittable HFSL train step.
-
-    loss_fn(params, batch, cfg) -> (loss, aux). Batch leaves carry a leading
-    cluster dim (see data/pipeline.cluster_batches).
-    """
+def _make_cluster_update(cfg, optimizer: Optimizer, loss_fn: Callable,
+                         clip_norm: float, microbatches: int) -> Callable:
+    """Per-cluster local step: grads (optionally accumulated over
+    ``microbatches`` splits of the cluster batch) -> one optimizer update."""
 
     def one_cluster(backbone, adapters, opt_state, batch):
-        def inner(a):
+        def inner(a, mb):
             loss, aux = loss_fn({"backbone": backbone, "adapters": a},
-                                batch, cfg)
+                                mb, cfg)
             return loss, aux
 
-        (loss, aux), grads = jax.value_and_grad(inner, has_aux=True)(adapters)
+        vg = jax.value_and_grad(inner, has_aux=True)
+        if microbatches <= 1:
+            (loss, aux), grads = vg(adapters, batch)
+        else:
+            def split(x):
+                if x.shape[0] % microbatches:
+                    raise ValueError(
+                        f"cluster batch {x.shape[0]} not divisible by "
+                        f"microbatches={microbatches}")
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+            mb0 = jax.tree.map(lambda x: x[0], mbs)
+            (l_av, aux_av), g_av = jax.eval_shape(vg, adapters, mb0)
+            zeros = lambda t: jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), t)
+
+            def mb_body(carry, mb):
+                gs, ls, axs = carry
+                (l, ax), g = vg(adapters, mb)
+                return (jax.tree.map(jnp.add, gs, g), ls + l,
+                        jax.tree.map(jnp.add, axs, ax)), None
+
+            (gs, ls, axs), _ = jax.lax.scan(
+                mb_body, (zeros(g_av), jnp.zeros(l_av.shape, l_av.dtype),
+                          zeros(aux_av)), mbs)
+            inv = 1.0 / microbatches
+            # mean-of-means == full-batch mean for equal splits
+            grads = jax.tree.map(lambda g: (g * inv).astype(g.dtype), gs)
+            loss = ls * inv
+            aux = jax.tree.map(lambda v: v * inv, axs)
         if clip_norm:
             grads, _ = clip_by_global_norm(grads, clip_norm)
         updates, opt_state = optimizer.update(grads, opt_state, adapters)
         adapters = apply_updates(adapters, updates)
         return adapters, opt_state, loss, aux
 
+    return one_cluster
+
+
+def _sync_at_boundary(adapters_c, new_step, *, sync_every: int,
+                      always_sync: bool):
+    """FedAvg at ``sync_every`` multiples of the (possibly traced) counter."""
+    if always_sync or sync_every == 1:
+        return fedavg(adapters_c)
+    do_sync = (new_step % sync_every) == 0
+    synced = fedavg(adapters_c)
+    return jax.tree.map(
+        lambda s, a: jnp.where(do_sync, s, a), synced, adapters_c)
+
+
+def _make_step_body(cfg, optimizer: Optimizer, loss_fn: Callable, *,
+                    sync_every: int, clip_norm: float, always_sync: bool,
+                    microbatches: int) -> Callable:
+    one_cluster = _make_cluster_update(cfg, optimizer, loss_fn, clip_norm,
+                                       microbatches)
+
     def step(state: dict, batch: dict) -> tuple[dict, dict]:
         adapters_c, opt_c, loss_c, aux_c = jax.vmap(
             one_cluster, in_axes=(None, 0, 0, 0))(
             state["backbone"], state["adapters_c"], state["opt"], batch)
         new_step = state["step"] + 1
-        if always_sync or sync_every == 1:
-            adapters_c = fedavg(adapters_c)
-        else:
-            do_sync = (new_step % sync_every) == 0
-            synced = fedavg(adapters_c)
-            adapters_c = jax.tree.map(
-                lambda s, a: jnp.where(do_sync, s, a), synced, adapters_c)
+        adapters_c = _sync_at_boundary(adapters_c, new_step,
+                                       sync_every=sync_every,
+                                       always_sync=always_sync)
         metrics = {"loss": jnp.mean(loss_c), "loss_per_cluster": loss_c}
         for k in (aux_c or {}):
             metrics[k] = jnp.mean(aux_c[k])
@@ -146,6 +199,69 @@ def make_hfsl_step(cfg, optimizer: Optimizer, loss_fn: Callable, *,
                 "step": new_step}, metrics
 
     return step
+
+
+def make_hfsl_step(cfg, optimizer: Optimizer, loss_fn: Callable, *,
+                   sync_every: int = 1, clip_norm: float = 0.0,
+                   always_sync: bool = False,
+                   microbatches: int = 1) -> Callable:
+    """Build the jittable single HFSL train step (one dispatch per step).
+
+    loss_fn(params, batch, cfg) -> (loss, aux). Batch leaves carry a leading
+    cluster dim (see data/pipeline.cluster_batches). Prefer
+    :func:`make_hfsl_round` on the hot path — it runs K of these per
+    dispatch.
+    """
+    return _make_step_body(cfg, optimizer, loss_fn, sync_every=sync_every,
+                           clip_norm=clip_norm, always_sync=always_sync,
+                           microbatches=microbatches)
+
+
+def make_hfsl_round(cfg, optimizer: Optimizer, loss_fn: Callable, *,
+                    steps: int, sync_every: int = 1, clip_norm: float = 0.0,
+                    always_sync: bool = False, microbatches: int = 1,
+                    remat: Optional[bool] = None, jit: bool = True) -> Callable:
+    """Fused fine-tuning round: ``steps`` HFSL steps in ONE jitted dispatch.
+
+    Returned ``round_fn(state, bank, offset=0) -> (state, metrics)``:
+
+    - ``state`` — the init_hfsl_state dict; the carried ``state['step']``
+      counter enters and leaves the scan, so FedAvg phase is preserved
+      across rounds (pass the previous round's counter back in).
+    - ``bank`` — device-resident batch bank: every leaf shaped
+      ``(E, n_clusters, batch, ...)`` (data/pipeline.py::BatchBank.arrays).
+      Step ``i`` trains on epoch row ``(offset + i) % E`` — the gather is
+      indexed by the scanned step, so the whole round runs without a single
+      host->device transfer.
+    - ``metrics`` — the per-step metric dicts stacked to leading ``(steps,)``.
+
+    ``microbatches`` accumulates gradients over that many equal splits of
+    each cluster batch before the optimizer update (activation memory drops
+    by the same factor; the update is numerically the full-batch one).
+    ``remat`` is forwarded to ``loss_fn`` (e.g. model.lm_loss re-materializes
+    the per-layer forward under ``jax.checkpoint``) for long-sequence LM
+    fine-tuning; None leaves the loss untouched for losses without the knob.
+
+    Numerics match ``steps`` sequential :func:`make_hfsl_step` calls on the
+    same batches exactly — the two engines share one step body.
+    """
+    if remat is not None:
+        loss_fn = functools.partial(loss_fn, remat=remat)
+    step = _make_step_body(cfg, optimizer, loss_fn, sync_every=sync_every,
+                           clip_norm=clip_norm, always_sync=always_sync,
+                           microbatches=microbatches)
+
+    def round_fn(state: dict, bank: dict, offset=0) -> tuple[dict, dict]:
+        epoch = jax.tree.leaves(bank)[0].shape[0]
+        off = jnp.asarray(offset, jnp.int32)
+
+        def body(carry, i):
+            batch = jax.tree.map(lambda x: x[(off + i) % epoch], bank)
+            return step(carry, batch)
+
+        return jax.lax.scan(body, state, jnp.arange(steps, dtype=jnp.int32))
+
+    return jax.jit(round_fn) if jit else round_fn
 
 
 def consensus_params(state: dict) -> dict:

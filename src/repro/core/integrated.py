@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,7 +36,7 @@ from repro.core.comm import CostModel, RoundCost
 from repro.core.peft import tree_bytes
 from repro.core.scheduler import SchedulerEnv, mlcp_policy, run_policy
 from repro.data.noniid import partition_by_classes
-from repro.data.pipeline import cluster_batches
+from repro.data.pipeline import BatchBank
 from repro.launch.engine import DecodeEngine
 from repro.models import model as M
 from repro.optim.optimizers import adamw
@@ -47,6 +47,9 @@ class DomainState:
     name: str
     adapters_c: dict                   # per-cluster replicas (HFSL state)
     opt_state: dict
+    # HFSL step counter, persisted ACROSS upgrade rounds so the
+    # sync_every FedAvg phase continues instead of restarting each round
+    step: Any = None                   # scalar int32 device array
     level: int = 0                     # number of fine-tuning rounds applied
     accuracy: float = 0.0
 
@@ -67,14 +70,15 @@ class IntegratedRuntime:
 
     def __init__(self, cfg, tasks: dict, *, n_clusters: int = 2,
                  steps_per_upgrade: int = 20, batch: int = 16,
-                 serve_batch: int = 64, serve_gen: int = 4,
-                 serve_slots: int = 16, lr: float = 5e-3,
+                 sync_every: int = 5, serve_batch: int = 64,
+                 serve_gen: int = 4, serve_slots: int = 16, lr: float = 5e-3,
                  profit_scale: float = 100.0, upgrade_cost: float = 50.0,
                  cost_model: Optional[CostModel] = None, seed: int = 0):
         self.cfg = cfg
         self.tasks = tasks                       # domain -> ClassificationTask
         self.n_clusters = n_clusters
         self.steps = steps_per_upgrade
+        self.sync_every = sync_every
         self.profit_scale = profit_scale
         self.upgrade_cost = upgrade_cost
         self.cm = cost_model or CostModel()
@@ -88,8 +92,9 @@ class IntegratedRuntime:
         params = M.init(cfg, key)
         self.backbone = params["backbone"]       # shared frozen FM
         self.opt = adamw(lr)
+        self.batch = batch
         self.domains: dict[str, DomainState] = {}
-        self._its: dict[str, object] = {}
+        self._banks: dict[str, BatchBank] = {}
         for i, name in enumerate(tasks):
             state = hfsl.init_hfsl_state(jax.random.PRNGKey(seed + i), cfg,
                                          n_clusters, self.opt,
@@ -98,12 +103,17 @@ class IntegratedRuntime:
             parts = partition_by_classes(data["label"], n_clusters,
                                          cfg.peft.head_dim_out,
                                          seed=seed + i)
-            self._its[name] = cluster_batches(data, parts, batch,
-                                              seed=seed + i)
+            # one epoch of per-cluster batches lives on device for the whole
+            # runtime; every upgrade round gathers from it inside the scan
+            self._banks[name] = BatchBank.pack(data, parts, batch,
+                                               seed=seed + i)
             self.domains[name] = DomainState(
-                name, state["adapters_c"], state["opt"])
-        self._step = jax.jit(hfsl.make_hfsl_step(
-            cfg, self.opt, M.classify_loss, sync_every=5))
+                name, state["adapters_c"], state["opt"], state["step"])
+        # ONE jitted dispatch per fine-tuning round (the decode engine's
+        # twin): steps_per_upgrade scanned HFSL steps, in-scan FedAvg
+        self._round = hfsl.make_hfsl_round(
+            cfg, self.opt, M.classify_loss, steps=self.steps,
+            sync_every=self.sync_every)
         self._classify = jax.jit(lambda p, b: M.classify(p, b, cfg))
         self.records: list[RoundRecord] = []
         self._eval_cache: dict[str, dict] = {
@@ -126,19 +136,37 @@ class IntegratedRuntime:
 
     # -- the two GAI services ----------------------------------------------
     def upgrade(self, domain: str) -> tuple[float, RoundCost]:
-        """One HFSL fine-tuning round for `domain` (paper: 'upgrade')."""
+        """One HFSL fine-tuning round for `domain` (paper: 'upgrade').
+
+        The round's steps_per_upgrade HFSL steps run in ONE jitted scan
+        dispatch (hfsl.make_hfsl_round) over the domain's device-resident
+        batch bank. The domain's HFSL step counter persists across rounds,
+        so the sync_every FedAvg phase continues where the last upgrade
+        left off; comm is booked per FedAvg actually fired. The RoundCost
+        ledger records examples consumed and measured ex_per_s — the
+        fine-tuning twin of produce()'s tokens / tok_per_s.
+        """
         d = self.domains[domain]
+        bank = self._banks[domain]
         state = {"backbone": self.backbone, "adapters_c": d.adapters_c,
-                 "opt": d.opt_state, "step": jnp.zeros((), jnp.int32)}
+                 "opt": d.opt_state, "step": d.step}
+        step0 = int(state["step"])
         t0 = time.time()
-        for _ in range(self.steps):
-            state, _ = self._step(state, next(self._its[domain]))
-        d.adapters_c, d.opt_state = state["adapters_c"], state["opt"]
+        state, _ = self._round(state, bank.arrays, bank.advance(self.steps))
+        jax.block_until_ready(state["adapters_c"])
+        dt = time.time() - t0
+        d.adapters_c, d.opt_state, d.step = \
+            state["adapters_c"], state["opt"], state["step"]
         d.level += 1
         d.accuracy = self._measure(domain)
-        comm = hfsl.sync_bytes(d.adapters_c) * (self.steps // 5 + 1)
-        cost = RoundCost(time.time() - t0, 0.0,
-                         self.cm.cs.energy(comm), comm, 0)
+        examples = self.steps * self.n_clusters * self.batch
+        seq = bank.arrays["tokens"].shape[-1]
+        flops = 6.0 * self.cfg.active_param_count() * examples * seq
+        n_syncs = (step0 + self.steps) // self.sync_every \
+            - step0 // self.sync_every
+        comm = hfsl.sync_bytes(d.adapters_c) * n_syncs
+        cost = RoundCost(dt, flops, self.cm.cs.energy(comm), comm, 0,
+                         examples=examples)
         return -self.upgrade_cost, cost
 
     def produce(self, domain: str) -> tuple[float, RoundCost]:

@@ -1,8 +1,21 @@
-"""Batching pipeline over in-memory datasets (per-cluster shards)."""
+"""Batching pipeline over in-memory datasets (per-cluster shards).
+
+Two ways to feed core/hfsl.py:
+
+- :func:`cluster_batches` — legacy host iterator: one host->device copy per
+  step (kept for parity tests and host-streamed datasets).
+- :class:`BatchBank` — device-resident bank: a whole epoch of per-cluster
+  batches pre-packed into stacked ``(steps, cluster, batch, ...)`` device
+  arrays, gathered *inside* the scanned round by step index
+  (hfsl.make_hfsl_round) — zero host transfers inside a round.
+"""
 from __future__ import annotations
 
+import dataclasses
+import itertools
 from typing import Iterator, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,3 +47,56 @@ def cluster_batches(data: dict, parts: Sequence[np.ndarray], batch_size: int,
     while True:
         bs = [next(it) for it in its]
         yield {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
+
+
+@dataclasses.dataclass
+class BatchBank:
+    """Device-resident epoch of stacked per-cluster batches.
+
+    ``arrays`` leaves are ``(steps, n_clusters, batch, ...)`` device arrays.
+    hfsl.make_hfsl_round gathers row ``(offset + i) % steps`` by the scanned
+    step index, so a round of K steps touches the host zero times; the
+    ``offset`` cursor (see :meth:`advance`) carries epoch position across
+    rounds exactly like the legacy iterator would.
+    """
+    arrays: dict
+    offset: int = 0
+
+    @property
+    def steps(self) -> int:
+        return next(iter(jax.tree.leaves(self.arrays))).shape[0]
+
+    @property
+    def n_clusters(self) -> int:
+        return next(iter(jax.tree.leaves(self.arrays))).shape[1]
+
+    def advance(self, steps: int) -> int:
+        """Return the current cursor and move it ``steps`` forward (wraps)."""
+        off = self.offset
+        self.offset = (self.offset + steps) % self.steps
+        return off
+
+    @classmethod
+    def pack(cls, data: dict, parts: Sequence[np.ndarray], batch_size: int,
+             *, seed: int = 0, steps: Optional[int] = None) -> "BatchBank":
+        """Pre-pack one epoch of :func:`cluster_batches`-shaped batches.
+
+        The epoch length is the smallest cluster's batch count (every row
+        must hold one batch per cluster) unless ``steps`` caps it.
+        """
+        epoch = min(len(p) // batch_size for p in parts)
+        if steps is not None:
+            epoch = min(epoch, steps)
+        if epoch < 1:
+            raise ValueError(
+                f"smallest cluster has < {batch_size} examples; "
+                "cannot pack a BatchBank row")
+        it = cluster_batches(data, parts, batch_size, seed=seed)
+        return cls.from_iterator(it, epoch)
+
+    @classmethod
+    def from_iterator(cls, it: Iterator[dict], steps: int) -> "BatchBank":
+        """Stack ``steps`` batches from any cluster-batch iterator."""
+        rows = list(itertools.islice(it, steps))
+        return cls({k: jnp.stack([r[k] for r in rows])
+                    for k in rows[0]})

@@ -467,21 +467,88 @@ def rglru_step(x, r_gate, i_gate, a_param, h, c: float = 8.0):
 
 
 # ---------------------------------------------------------------------------
-# LoRA-fused matmul
+# LoRA-fused matmul (trainable: custom VJP so `grad` traverses the kernel)
 # ---------------------------------------------------------------------------
 
 def lora_matmul(x, w, a=None, b=None, scale: float = 1.0, bias=None, *,
                 backend: Optional[str] = None):
-    """y = x @ w (+ scale * (x@a)@b) (+ bias). Falls back to plain matmul."""
+    """y = x @ w (+ scale * (x@a)@b) (+ bias). Falls back to plain matmul.
+
+    Differentiable on every backend: a custom VJP makes the fused Pallas
+    forward usable under ``jax.grad``. On the PEFT hot path the backward
+    costs only ``dx``/``dA``/``dB`` (+ ``dbias``) — adapter-only training
+    (core/peft.py) never differentiates w, so the frozen-weight gradient
+    ``dW = x^T dy`` is dead code under jit and never materializes; full
+    fine-tuning (``trainable='all'``) still receives the exact dW.
+    """
     if a is None:
         y = x @ w
         return (y + bias.astype(y.dtype)) if bias is not None else y
-    impl = _pick(backend)
+    return _lora_vjp(_pick(backend), float(scale), x, w, a, b, bias)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _lora_vjp(impl, scale, x, w, a, b, bias):
+    return _lora_forward(impl, scale, x, w, a, b, bias)
+
+
+def _lora_forward(impl, scale, x, w, a, b, bias):
     if impl in ("pallas", "interpret") and x.ndim == 2:
         from repro.kernels import lora_matmul as lk
         return lk.lora_matmul_pallas(x, w, a, b, scale, bias,
                                      interpret=(impl == "interpret"))
     return _lora_xla(x, w, a, b, scale, bias)
+
+
+def _lora_fwd_rule(impl, scale, x, w, a, b, bias):
+    y = _lora_forward(impl, scale, x, w, a, b, bias)
+    return y, (x, w, a, b, bias)
+
+
+def _lora_bwd_rule(impl, scale, res, dy):
+    """dx reuses the *forward* fused kernel (dx = dy W^T + s (dy B^T) A^T is
+    itself a LoRA matmul with (W, A, B) -> (W^T, B^T, A^T)); dA/dB go through
+    the dedicated adapter-grad kernel (kernels/lora_matmul.py::_bwd_kernel).
+    dW = x^T dy is exact for full fine-tuning (peft.py trainable='all'), and
+    under the PEFT regime — where w is never a differentiation target — the
+    jitted round drops the dense matmul as dead code, so adapter-only
+    training never materializes it."""
+    x, w, a, b, bias = res
+    x2 = x.reshape(-1, x.shape[-1])
+    dy2 = dy.reshape(-1, dy.shape[-1])
+    dx = _lora_forward(impl, scale, dy2, w.T, b.T, a.T, None)
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import lora_matmul as lk
+        da, db = lk.lora_matmul_bwd_pallas(x2, dy2, a, b, scale,
+                                           interpret=(impl == "interpret"))
+    else:
+        da, db = _lora_bwd_xla(x2, dy2, a, b, scale)
+    dw = jax.lax.dot_general(x2, dy2, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    dbias = None if bias is None else \
+        jnp.sum(dy2.astype(jnp.float32), axis=0).astype(bias.dtype)
+    return (dx.reshape(x.shape).astype(x.dtype), dw.astype(w.dtype),
+            da.astype(a.dtype), db.astype(b.dtype), dbias)
+
+
+_lora_vjp.defvjp(_lora_fwd_rule, _lora_bwd_rule)
+
+
+def _lora_bwd_xla(x, dy, a, b, scale):
+    """Adapter grads, native-dtype dots with f32 accumulation (the kernel's
+    dataflow in XLA): both rank-r intermediates are (M, r), so the extra HBM
+    traffic over reading x/dy once is negligible."""
+    g = jax.lax.dot_general(dy, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # dy @ b^T
+    u = jax.lax.dot_general(x, a, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # x @ a
+    da = scale * jax.lax.dot_general(
+        x, g.astype(x.dtype), (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                       # x^T @ g
+    db = scale * jax.lax.dot_general(
+        u.astype(dy.dtype), dy, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                       # u^T @ dy
+    return da, db
 
 
 def _lora_xla(x, w, a, b, scale, bias=None):

@@ -152,3 +152,18 @@ def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
     if bias is not None:
         y = y + bias.astype(jnp.float32)
     return y.astype(x.dtype)
+
+
+def lora_matmul_bwd(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
+                    scale: float, dy: jax.Array):
+    """Naive einsum VJP of :func:`lora_matmul` wrt (x, a, b) — f32 math.
+
+    The frozen-weight grad ``dW = x^T dy`` is deliberately absent: under the
+    paper's PEFT regime it must never be materialized. Returns (dx, dA, dB).
+    """
+    xf, dyf = x.astype(jnp.float32), dy.astype(jnp.float32)
+    af, bf, wf = (t.astype(jnp.float32) for t in (a, b, w))
+    dx = dyf @ wf.T + scale * (dyf @ bf.T) @ af.T
+    da = scale * xf.T @ (dyf @ bf.T)
+    db = scale * (xf @ af).T @ dyf
+    return dx.astype(x.dtype), da, db

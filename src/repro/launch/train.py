@@ -3,9 +3,14 @@
 Runs on whatever devices exist — a 1-device CPU box trains reduced configs
 (examples use this), a real pod trains full configs with the same code path.
 
+``--impl scan`` (default) runs the fused round engine: ``--log-every`` HFSL
+steps per jitted ``lax.scan`` dispatch over a device-resident batch bank
+(hfsl.make_hfsl_round); ``--impl loop`` keeps the legacy one-dispatch-per-
+step path (benchmarks/finetune_bench.py measures the gap).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.train --arch vit-edge --reduced \
-      --task classify --clusters 4 --steps 200 --sync-every 4
+      --task classify --clusters 4 --steps 200 --sync-every 4 --impl scan
 """
 from __future__ import annotations
 
@@ -23,7 +28,7 @@ from repro.configs.base import get_config
 from repro.core import hfsl
 from repro.core.peft import trainable_fraction, tree_bytes
 from repro.data.noniid import partition_by_classes
-from repro.data.pipeline import cluster_batches
+from repro.data.pipeline import BatchBank, cluster_batches
 from repro.data.synthetic import ClassificationTask, LMStream
 from repro.models import model as M
 from repro.optim.optimizers import adamw
@@ -53,6 +58,15 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--sync-every", type=int, default=4)
+    ap.add_argument("--impl", choices=("scan", "loop"), default="scan",
+                    help="scan: fused round engine (one dispatch per "
+                         "--log-every steps); loop: legacy per-step dispatch")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="gradient-accumulation splits per cluster batch "
+                         "(scan impl)")
+    ap.add_argument("--remat", action="store_true",
+                    help="checkpoint the per-layer forward (lm task, scan "
+                         "impl): long-sequence activation memory relief")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
@@ -86,18 +100,41 @@ def main(argv=None):
                 bs = [next(i) for i in its]
                 yield {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
         it = it_gen()
-        loss_fn = lambda p, b, c: M.lm_loss(p, b, c)
+        loss_fn = M.lm_loss                  # accepts remat= for the scan impl
 
-    step_fn = jax.jit(hfsl.make_hfsl_step(cfg, opt, loss_fn,
-                                          sync_every=args.sync_every))
     t0 = time.time()
-    for i in range(args.steps):
-        state, metrics = step_fn(state, next(it))
-        if (i + 1) % args.log_every == 0 or i == 0:
-            m = {k: float(v) for k, v in metrics.items()
-                 if jnp.ndim(v) == 0}
-            print(f"[train] step {i+1:5d} {m} "
-                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+    if args.impl == "scan":
+        remat = True if (args.remat and args.task == "lm") else None
+        # pack the run's whole batch stream (same iterator + seed as the
+        # loop impl, so the two impls are step-for-step identical); very
+        # long runs recycle the first 512 rows modulo-epoch
+        bank = BatchBank.from_iterator(it, min(args.steps, 512))
+        rounds: dict[int, object] = {}      # one compiled round per chunk len
+        done = 0
+        while done < args.steps:
+            chunk = min(args.log_every, args.steps - done)
+            if chunk not in rounds:
+                rounds[chunk] = hfsl.make_hfsl_round(
+                    cfg, opt, loss_fn, steps=chunk,
+                    sync_every=args.sync_every,
+                    microbatches=args.microbatches, remat=remat)
+            state, metrics = rounds[chunk](state, bank.arrays,
+                                           bank.advance(chunk))
+            done += chunk
+            m = {k: float(v[-1]) for k, v in metrics.items()
+                 if jnp.ndim(v) == 1}
+            print(f"[train] step {done:5d} {m} "
+                  f"({(time.time()-t0)/done:.2f}s/step)")
+    else:
+        step_fn = jax.jit(hfsl.make_hfsl_step(cfg, opt, loss_fn,
+                                              sync_every=args.sync_every))
+        for i in range(args.steps):
+            state, metrics = step_fn(state, next(it))
+            if (i + 1) % args.log_every == 0 or i == 0:
+                m = {k: float(v) for k, v in metrics.items()
+                     if jnp.ndim(v) == 0}
+                print(f"[train] step {i+1:5d} {m} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
     print(f"[train] done in {time.time()-t0:.1f}s; "
           f"fedavg bytes/sync: {hfsl.sync_bytes(state['adapters_c'])}")
 

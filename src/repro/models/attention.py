@@ -49,14 +49,19 @@ def attn_spec(cfg: ModelConfig) -> dict:
 
 
 def _proj(x, w, bias, lora, scale):
-    """Projection with optional LoRA branch (kernel-dispatched)."""
+    """Projection with optional LoRA branch (kernel-dispatched).
+
+    Both training and inference traverse ops.lora_matmul: its custom VJP
+    keeps the fused kernel usable under ``jax.grad`` (adapter grads only —
+    the frozen ``dW`` is never formed), so the HFSL fine-tuning round and
+    the decode path share one projection fast path.
+    """
     if lora is not None:
         shp = x.shape
         y = kops.lora_matmul(x.reshape(-1, shp[-1]), w, lora["a"], lora["b"],
                              scale, bias)
         return y.reshape(*shp[:-1], w.shape[-1])
-    y = x @ w
-    return y + bias.astype(y.dtype) if bias is not None else y
+    return kops.lora_matmul(x, w, bias=bias)
 
 
 def _qkv(params, adapters, x, cfg: ModelConfig, kv_x=None):

@@ -1,0 +1,243 @@
+"""Fused fine-tuning round engine tests: scan-vs-loop parity, in-scan
+FedAvg semantics, BatchBank, LoRA merge under the serving paths."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import hfsl, peft
+from repro.data.noniid import partition_by_classes
+from repro.data.pipeline import BatchBank, cluster_batches
+from repro.data.synthetic import ClassificationTask, LMStream
+from repro.models import model as M
+from repro.optim.optimizers import adamw, sgd
+
+KEY = jax.random.PRNGKey(0)
+N, K, BATCH, SEQ = 3, 6, 4, 16
+
+
+def small_cfg():
+    cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    return cfg.with_(peft=dataclasses.replace(cfg.peft, head_dim_out=5))
+
+
+def classify_bank(cfg, seed=0):
+    task = ClassificationTask(5, cfg.vocab_size, SEQ, seed=seed)
+    data = task.dataset(40 * N, seed=seed + 1)
+    parts = partition_by_classes(data["label"], N, 3, seed=seed)
+    return BatchBank.pack(data, parts, BATCH, seed=seed)
+
+
+def lm_bank(cfg, seed=0):
+    streams = [LMStream(cfg.vocab_size, BATCH, SEQ, seed=seed + i)
+               for i in range(N)]
+    its = [iter(s) for s in streams]
+
+    def gen():
+        while True:
+            bs = [next(i) for i in its]
+            yield {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
+
+    return BatchBank.from_iterator(gen(), K)
+
+
+def run_loop(cfg, opt, loss_fn, state, bank, steps, **kw):
+    step = jax.jit(hfsl.make_hfsl_step(cfg, opt, loss_fn, **kw))
+    losses = []
+    for i in range(steps):
+        batch = jax.tree.map(lambda x: x[i % bank.steps], bank.arrays)
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def assert_trees_close(a, b, **tol):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), **tol)
+
+
+class TestRoundParity:
+    @pytest.mark.parametrize("kind", ["classify", "lm"])
+    def test_round_matches_k_legacy_steps(self, kind):
+        cfg = small_cfg()
+        opt = adamw(5e-3)
+        state = hfsl.init_hfsl_state(KEY, cfg, N, opt, M.init)
+        if kind == "classify":
+            bank, loss_fn = classify_bank(cfg), M.classify_loss
+        else:
+            bank, loss_fn = lm_bank(cfg), M.lm_loss
+        s_loop, losses = run_loop(cfg, opt, loss_fn, state, bank, K,
+                                  sync_every=3)
+        rnd = hfsl.make_hfsl_round(cfg, opt, loss_fn, steps=K, sync_every=3)
+        s_scan, ms = rnd(state, bank.arrays, 0)
+        assert int(s_scan["step"]) == K
+        assert_trees_close(s_loop["adapters_c"], s_scan["adapters_c"],
+                           atol=1e-6, rtol=1e-6)
+        assert_trees_close(s_loop["opt"], s_scan["opt"],
+                           atol=1e-6, rtol=1e-6)
+        np.testing.assert_allclose(losses, np.asarray(ms["loss"]), atol=1e-6)
+
+    def test_round_continues_across_calls(self):
+        """Two rounds with carried step/offset == one long legacy run — the
+        FedAvg phase must persist across round boundaries (the old
+        integrated.py bug reset it)."""
+        cfg = small_cfg()
+        opt = sgd(0.1)
+        state = hfsl.init_hfsl_state(KEY, cfg, N, opt, M.init)
+        bank = classify_bank(cfg)
+        s_loop, _ = run_loop(cfg, opt, M.classify_loss, state, bank, 2 * K,
+                             sync_every=4)
+        rnd = hfsl.make_hfsl_round(cfg, opt, M.classify_loss, steps=K,
+                                   sync_every=4)
+        s1, _ = rnd(state, bank.arrays, 0)
+        s2, _ = rnd(s1, bank.arrays, K % bank.steps)
+        assert int(s2["step"]) == 2 * K
+        assert_trees_close(s_loop["adapters_c"], s2["adapters_c"],
+                           atol=1e-6, rtol=1e-6)
+
+    def test_microbatch_accumulation_matches_full_batch(self):
+        cfg = small_cfg()
+        opt = adamw(5e-3)
+        state = hfsl.init_hfsl_state(KEY, cfg, N, opt, M.init)
+        bank = classify_bank(cfg)
+        full = hfsl.make_hfsl_round(cfg, opt, M.classify_loss, steps=K,
+                                    sync_every=3)
+        accum = hfsl.make_hfsl_round(cfg, opt, M.classify_loss, steps=K,
+                                     sync_every=3, microbatches=2)
+        s_full, m_full = full(state, bank.arrays, 0)
+        s_acc, m_acc = accum(state, bank.arrays, 0)
+        # mean-of-means == full-batch mean up to f32 reassociation
+        assert_trees_close(s_full["adapters_c"], s_acc["adapters_c"],
+                           atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(np.asarray(m_full["loss"]),
+                                   np.asarray(m_acc["loss"]), atol=1e-5)
+
+    def test_remat_round_matches_plain(self):
+        cfg = small_cfg()
+        opt = sgd(0.1)
+        state = hfsl.init_hfsl_state(KEY, cfg, N, opt, M.init)
+        bank = lm_bank(cfg)
+        plain = hfsl.make_hfsl_round(cfg, opt, M.lm_loss, steps=2)
+        remat = hfsl.make_hfsl_round(cfg, opt, M.lm_loss, steps=2, remat=True)
+        s_p, _ = plain(state, bank.arrays, 0)
+        s_r, _ = remat(state, bank.arrays, 0)
+        assert_trees_close(s_p["adapters_c"], s_r["adapters_c"],
+                           atol=1e-5, rtol=1e-5)
+
+
+class TestSyncSemantics:
+    """FedAvg fires exactly at sync_every multiples of the step counter;
+    cluster replicas diverge strictly between syncs — both engines."""
+
+    def _spread(self, state):
+        w = state["adapters_c"]["head"]["w"]
+        return float(jnp.max(jnp.std(w.astype(jnp.float32), axis=0)))
+
+    def _check_pattern(self, spreads, sync_every):
+        for s, spread in spreads.items():           # s is the 1-based step
+            if s % sync_every == 0:
+                assert spread < 1e-6, (s, spread)
+            else:
+                assert spread > 1e-7, (s, spread)
+
+    def test_legacy_loop_sync_pattern(self):
+        cfg = small_cfg()
+        opt = sgd(0.1)
+        state = hfsl.init_hfsl_state(KEY, cfg, N, opt, M.init)
+        bank = classify_bank(cfg)
+        step = jax.jit(hfsl.make_hfsl_step(cfg, opt, M.classify_loss,
+                                           sync_every=3))
+        spreads = {}
+        for i in range(K):
+            batch = jax.tree.map(lambda x: x[i % bank.steps], bank.arrays)
+            state, _ = step(state, batch)
+            spreads[i + 1] = self._spread(state)
+        self._check_pattern(spreads, 3)
+
+    def test_scanned_round_sync_pattern(self):
+        cfg = small_cfg()
+        opt = sgd(0.1)
+        state = hfsl.init_hfsl_state(KEY, cfg, N, opt, M.init)
+        bank = classify_bank(cfg)
+        rnd = hfsl.make_hfsl_round(cfg, opt, M.classify_loss, steps=1,
+                                   sync_every=3)
+        spreads = {}
+        for i in range(K):
+            state, _ = rnd(state, bank.arrays, i % bank.steps)
+            spreads[int(state["step"])] = self._spread(state)
+        self._check_pattern(spreads, 3)
+
+
+class TestBatchBank:
+    def test_pack_matches_iterator(self):
+        cfg = small_cfg()
+        task = ClassificationTask(5, cfg.vocab_size, SEQ, seed=0)
+        data = task.dataset(40 * N, seed=1)
+        parts = partition_by_classes(data["label"], N, 3, seed=0)
+        bank = BatchBank.pack(data, parts, BATCH, seed=0)
+        it = cluster_batches(data, parts, BATCH, seed=0)
+        for i in range(min(bank.steps, 3)):
+            row = next(it)
+            for k in row:
+                np.testing.assert_array_equal(np.asarray(bank.arrays[k][i]),
+                                              np.asarray(row[k]))
+        assert bank.n_clusters == N
+
+    def test_advance_wraps(self):
+        cfg = small_cfg()
+        bank = classify_bank(cfg)
+        E = bank.steps
+        assert bank.advance(E - 1) == 0
+        assert bank.advance(2) == E - 1
+        assert bank.offset == 1
+
+    def test_pack_rejects_empty_cluster(self):
+        data = {"tokens": np.zeros((8, 4), np.int32),
+                "label": np.zeros((8,), np.int32)}
+        parts = [np.arange(6), np.arange(6, 8)]     # cluster 1 < batch size
+        with pytest.raises(ValueError):
+            BatchBank.pack(data, parts, 4)
+
+
+class TestLoRAMergeServing:
+    """merge_lora_into_backbone parity on the *serving* paths (the forward
+    parity lives in test_core.py): merged backbone must generate the same
+    tokens and classify identically, including through the kernel-dispatched
+    fused projection."""
+
+    def _lora_params(self, cfg):
+        params = M.init(cfg, KEY)
+        stack = params["adapters"]["stack"]
+        for g in stack.values():
+            for s in g.values():
+                for ab in s.get("lora", {}).values():
+                    ab["b"] = jax.random.normal(KEY, ab["b"].shape,
+                                                ab["b"].dtype) * 0.02
+        return params
+
+    def test_merge_preserves_generate_scan(self):
+        cfg = small_cfg()
+        params = self._lora_params(cfg)
+        prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size,
+                                     dtype=jnp.int32)
+        before = M.generate_scan(params, cfg, prompts, gen=6)
+        merged = peft.merge_lora_into_backbone(params, cfg)
+        after = M.generate_scan(merged, cfg, prompts, gen=6)
+        np.testing.assert_array_equal(np.asarray(before), np.asarray(after))
+
+    def test_merge_preserves_classify_interpret_backend(self):
+        from repro.kernels import ops
+        cfg = small_cfg()
+        params = self._lora_params(cfg)
+        batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+        with ops.backend("interpret"):
+            before = M.classify(params, batch, cfg)
+            merged = peft.merge_lora_into_backbone(params, cfg)
+            after = M.classify(merged, batch, cfg)
+        np.testing.assert_allclose(np.asarray(before), np.asarray(after),
+                                   atol=2e-4, rtol=2e-4)

@@ -30,6 +30,20 @@ def test_upgrade_improves_accuracy(runtime):
     assert after > before - 0.05            # fine-tuning helps (noise slack)
     assert runtime.domains["nlp"].level == 1
     assert cost.comm_bytes > 0
+    # fine-tuning throughput ledger (the serving tok/s twin)
+    assert cost.examples == runtime.steps * runtime.n_clusters * runtime.batch
+    assert cost.ex_per_s > 0
+
+
+def test_upgrade_persists_hfsl_step_counter(runtime):
+    """The sync_every FedAvg phase must continue across upgrade rounds
+    instead of restarting at zero each round."""
+    start = int(runtime.domains["cv"].step)
+    runtime.upgrade("cv")
+    mid = int(runtime.domains["cv"].step)
+    runtime.upgrade("cv")
+    assert mid == start + runtime.steps
+    assert int(runtime.domains["cv"].step) == start + 2 * runtime.steps
 
 
 def test_produce_books_accuracy_profit(runtime):

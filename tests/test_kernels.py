@@ -160,3 +160,81 @@ def test_lora_matmul(M, K, N, r, dtype, with_bias):
     got = ops.lora_matmul(x, w, a, b, 2.0, bias, backend="interpret")
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("M,K,N,r", [(32, 64, 48, 4), (100, 200, 144, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_lora_matmul_custom_vjp(M, K, N, r, dtype, backend):
+    """grad through the fused kernel == einsum oracle: dx, dA, dB, dbias
+    (adapter grads only — the frozen dW is never formed)."""
+    ks = jax.random.split(KEY, 6)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    w = (jax.random.normal(ks[1], (K, N)) * 0.05).astype(dtype)
+    a = (jax.random.normal(ks[2], (K, r)) * 0.05).astype(dtype)
+    b = (jax.random.normal(ks[3], (r, N)) * 0.05).astype(dtype)
+    bias = jax.random.normal(ks[4], (N,)).astype(dtype)
+    dy = jax.random.normal(ks[5], (M, N), dtype)
+
+    def f(x_, a_, b_, bias_):
+        y = ops.lora_matmul(x_, w, a_, b_, 2.0, bias_, backend=backend)
+        return jnp.sum(y.astype(jnp.float32) * dy.astype(jnp.float32))
+
+    dx, da, db, dbias = jax.grad(f, argnums=(0, 1, 2, 3))(x, a, b, bias)
+    rdx, rda, rdb = ref.lora_matmul_bwd(x, w, a, b, 2.0, dy)
+    # grads accumulate over M rows — bf16 native-dtype dots round harder
+    # than the single forward pass
+    t = dict(atol=1e-1, rtol=5e-2) if dtype == jnp.bfloat16 else tol(dtype)
+    np.testing.assert_allclose(np.asarray(dx, np.float32),
+                               np.asarray(rdx, np.float32), **t)
+    np.testing.assert_allclose(np.asarray(da, np.float32),
+                               np.asarray(rda, np.float32), **t)
+    np.testing.assert_allclose(np.asarray(db, np.float32),
+                               np.asarray(rdb, np.float32), **t)
+    np.testing.assert_allclose(
+        np.asarray(dbias, np.float32),
+        np.asarray(jnp.sum(dy.astype(jnp.float32), 0)), **t)
+
+
+@pytest.mark.parametrize("backend", ["xla", "interpret"])
+def test_lora_matmul_vjp_full_ft_dw(backend):
+    """Full fine-tuning (peft trainable='all') must still receive the exact
+    frozen-weight grad dW = x^T dy through the custom VJP."""
+    ks = jax.random.split(KEY, 5)
+    M, K, N, r = 24, 32, 40, 4
+    x = jax.random.normal(ks[0], (M, K))
+    w = jax.random.normal(ks[1], (K, N)) * 0.05
+    a = jax.random.normal(ks[2], (K, r)) * 0.05
+    b = jax.random.normal(ks[3], (r, N)) * 0.05
+    dy = jax.random.normal(ks[4], (M, N))
+
+    def f(w_):
+        return jnp.vdot(ops.lora_matmul(x, w_, a, b, 2.0, backend=backend),
+                        dy)
+
+    dw = jax.grad(f)(w)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(x.T @ dy),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_lora_matmul_vjp_under_vmap():
+    """The HFSL shape: per-cluster adapters vmapped over the cluster dim."""
+    ks = jax.random.split(KEY, 5)
+    M, K, N, r, C = 16, 32, 24, 4, 3
+    x = jax.random.normal(ks[0], (M, K))
+    w = jax.random.normal(ks[1], (K, N)) * 0.05
+    av = jax.random.normal(ks[2], (C, K, r)) * 0.05
+    bv = jax.random.normal(ks[3], (C, r, N)) * 0.05
+    dy = jax.random.normal(ks[4], (M, N))
+
+    def f(a_, b_):
+        return jnp.vdot(ops.lora_matmul(x, w, a_, b_, 2.0,
+                                        backend="interpret"), dy)
+
+    da, db = jax.vmap(jax.grad(f, argnums=(0, 1)))(av, bv)
+    for c in range(C):
+        _, rda, rdb = ref.lora_matmul_bwd(x, w, av[c], bv[c], 2.0, dy)
+        np.testing.assert_allclose(np.asarray(da[c]), np.asarray(rda),
+                                   atol=2e-5, rtol=2e-5)
+        np.testing.assert_allclose(np.asarray(db[c]), np.asarray(rdb),
+                                   atol=2e-5, rtol=2e-5)
