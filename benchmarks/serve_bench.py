@@ -1,0 +1,119 @@
+"""Multi-tenant serving benchmark: mixed-domain demand, bank vs per-domain.
+
+When demand interleaves ``--domains`` domains, single-tenant serving must
+drain the engine once per domain with that domain's merged params — each
+drain gets only ``1/n_domains`` of the requests, so waves run near-empty
+(or serially per domain). The AdapterBank path packs ALL domains into
+shared waves: per-row ``adapter_ids`` select each request's (A, B) pair
+inside the batched multi-LoRA kernel (kernels/lora_bgmv.py), so one drain
+serves the full mixed demand at (ideally) single-domain throughput.
+
+Emits ``name,us_per_call,derived`` rows:
+
+- ``serve_single_domain`` — all requests one domain (the upper bound).
+- ``serve_per_domain``    — mixed demand, one engine drain per domain
+                            (the pre-bank baseline).
+- ``serve_mixed_bank``    — mixed demand, ONE drain against the bank.
+
+Compile time is excluded (warmup drain per impl).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.adapter_bank import AdapterBank
+from repro.launch.engine import DecodeEngine
+from repro.models import model as M
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false",
+                    help="benchmark the full-size config (default: reduced)")
+    ap.set_defaults(reduced=True)
+    # defaults model interleaved demand: per-domain share (requests /
+    # domains) UNDER-fills a wave, so the per-domain baseline pays a
+    # mostly-padded drain per domain while the bank packs one full wave
+    ap.add_argument("--domains", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="total mixed-demand requests per drain")
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    # benchmarks/run.py imports main() with argv=None -> defaults
+    args = ap.parse_args([] if argv is None else argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().with_(dtype="float32")
+    names = [f"dom{i}" for i in range(args.domains)]
+    ks = jax.random.split(jax.random.PRNGKey(0), args.domains + 2)
+    adapters = {d: M.init(cfg, ks[i])["adapters"]
+                for i, d in enumerate(names)}
+    backbone = M.init(cfg, ks[-2])["backbone"]
+    bank = AdapterBank.create(adapters)
+    prompts = np.asarray(jax.random.randint(
+        ks[-1], (args.requests, args.prompt_len), 0, cfg.vocab_size,
+        dtype=jnp.int32))
+    # round-robin mixed demand: consecutive requests hit different domains
+    demand = [names[i % args.domains] for i in range(args.requests)]
+    ntok = args.requests * args.gen
+
+    def drain_single() -> float:
+        """Upper bound: the whole demand is one domain (full waves)."""
+        engine = DecodeEngine(cfg, slots=args.slots)
+        params = {"backbone": backbone, "adapters": adapters[names[0]]}
+        t0 = time.time()
+        engine.serve(params, prompts, gen=args.gen)
+        return time.time() - t0
+
+    def drain_per_domain() -> float:
+        """Pre-bank baseline: one engine drain (and one host-side param
+        tree) per domain in the mixed demand."""
+        engine = DecodeEngine(cfg, slots=args.slots)
+        t0 = time.time()
+        for d in names:
+            rows = [i for i, dd in enumerate(demand) if dd == d]
+            params = {"backbone": backbone, "adapters": adapters[d]}
+            engine.serve(params, prompts[rows], gen=args.gen)
+        return time.time() - t0
+
+    def drain_mixed_bank() -> float:
+        """ONE drain: mixed-domain waves against the device-resident bank."""
+        engine = DecodeEngine(cfg, slots=args.slots, bank=bank)
+        t0 = time.time()
+        engine.serve(bank.serving_params(backbone), prompts, gen=args.gen,
+                     domains=demand)
+        return time.time() - t0
+
+    results = {}
+    for name, fn in [("serve_single_domain", drain_single),
+                     ("serve_per_domain", drain_per_domain),
+                     ("serve_mixed_bank", drain_mixed_bank)]:
+        fn()                                   # warmup: compile + first drain
+        dt = fn()
+        results[name] = dt
+        emit(name, dt * 1e6, f"tok_s={ntok / dt:.1f};domains={args.domains};"
+             f"requests={args.requests}")
+    emit("serve_mixed_vs_per_domain", 0,
+         f"speedup={results['serve_per_domain'] / results['serve_mixed_bank']:.2f}x;"
+         f"frac_of_single="
+         f"{results['serve_single_domain'] / results['serve_mixed_bank']:.2f}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    out = main(sys.argv[1:])
+    print(f"# mixed-bank vs per-domain: "
+          f"{out['serve_per_domain'] / out['serve_mixed_bank']:.2f}x; "
+          f"fraction of single-domain throughput: "
+          f"{out['serve_single_domain'] / out['serve_mixed_bank']:.2f}")

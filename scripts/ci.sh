@@ -5,8 +5,8 @@
 #
 # Mirrors what the ROADMAP calls tier-1 (`python -m pytest -x -q`) and adds
 # a fast interpret-mode Pallas smoke (flash attention + flash decode +
-# trainable LoRA matmul fwd/bwd) so kernel regressions surface even when
-# the suite is filtered.
+# trainable LoRA matmul fwd/bwd + batched multi-LoRA) so kernel regressions
+# surface even when the suite is filtered.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -58,5 +58,23 @@ rdx, rda, rdb = ref.lora_matmul_bwd(x, w, a, b, 2.0, dy)
 for g, r in ((dx, rdx), (da, rda), (db, rdb)):
     np.testing.assert_allclose(np.asarray(g), np.asarray(r),
                                atol=1e-3, rtol=1e-3)
-print("[ci] interpret-mode kernel smoke OK (attn + decode + lora fwd/bwd)")
+
+# batched multi-LoRA (multi-tenant serving): rows (BGMV, masked-accumulation)
+# and sequence (scalar-prefetched gather) fwd vs the gather oracle
+n_slots = 3
+ks = jax.random.split(key, 3)
+a_s = jax.random.normal(ks[0], (n_slots, K_, r_)) * 0.05
+b_s = jax.random.normal(ks[1], (n_slots, r_, N_)) * 0.05
+ids = jax.random.randint(ks[2], (M_,), 0, n_slots, dtype=jnp.int32)
+want = ref.lora_bgmv(x, w, a_s, b_s, ids, 2.0)
+got = ops.lora_bgmv(x, w, a_s, b_s, ids, 2.0, backend="interpret")
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           atol=1e-3, rtol=1e-3)
+xs = x.reshape(4, M_ // 4, K_)
+want = ref.lora_bgmv(xs, w, a_s, b_s, ids[:4], 2.0)
+got = ops.lora_bgmv(xs, w, a_s, b_s, ids[:4], 2.0, backend="interpret")
+np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                           atol=1e-3, rtol=1e-3)
+print("[ci] interpret-mode kernel smoke OK "
+      "(attn + decode + lora fwd/bwd + multi-lora gathered fwd)")
 PY

@@ -1,0 +1,126 @@
+"""Device-resident multi-tenant adapter bank (the serving twin of BatchBank).
+
+GaisNet's layout is ONE shared frozen FM with many per-domain adapter sets
+(paper §III-B, Fig 3). Single-tenant serving assembles a merged param tree
+per domain on the host and drains the decode engine once per domain; the
+bank instead keeps EVERY domain's adapters resident on device in one
+stacked pytree so a single engine wave mixes rows from different domains
+(S-LoRA/Punica-style multi-tenant serving):
+
+- **Serving layout**: leaves under the ``stack`` subtree gain an
+  ``n_slots`` dim *after* the scanned layer dim — ``(L, n_slots, ...)`` —
+  so the model's layer scan hands each layer the whole slot stack and the
+  batched multi-LoRA kernel (kernels/lora_bgmv.py) / per-row gathers select
+  by ``adapter_ids``. All other leaves (e.g. the classification ``head``)
+  are slot-leading ``(n_slots, ...)``.
+- **publish(domain, adapters)**: one jitted ``dynamic_update_slice`` at the
+  domain's slot — no host transfer, no recompile (the slot index is a
+  traced scalar), visible to the very next wave. Each publish bumps the
+  domain's version, mirroring KnowledgeRelay's edge versioning.
+- **snapshot(domain)**: the training-side acquire — slices one domain's
+  adapter tree back out (e.g. to seed an HFSL round or a parity check).
+
+The bank never holds the backbone: :meth:`serving_params` pairs the shared
+frozen backbone with the stacked adapters per wave.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _slot_axis(key: str) -> int:
+    # 'stack' leaves keep their scanned layer dim leading; everything else
+    # (head, future flat adapters) stacks slot-first.
+    return 1 if key == "stack" else 0
+
+
+def _publish(stacked: dict, new: dict, slot: jax.Array) -> dict:
+    out = {}
+    for key in stacked:
+        axis = _slot_axis(key)
+        out[key] = jax.tree.map(
+            lambda cur, add: jax.lax.dynamic_update_slice_in_dim(
+                cur, jnp.expand_dims(add.astype(cur.dtype), axis), slot,
+                axis=axis),
+            stacked[key], new[key])
+    return out
+
+
+def _snapshot(stacked: dict, slot: jax.Array) -> dict:
+    out = {}
+    for key in stacked:
+        axis = _slot_axis(key)
+        out[key] = jax.tree.map(
+            lambda cur: jax.lax.dynamic_index_in_dim(cur, slot, axis=axis,
+                                                     keepdims=False),
+            stacked[key])
+    return out
+
+
+_publish_jit = jax.jit(_publish)
+_snapshot_jit = jax.jit(_snapshot)
+
+
+class AdapterBank:
+    """Stacked per-domain adapter store with slot-indexed publish/serve."""
+
+    def __init__(self, domains: Sequence[str], stacked: dict):
+        self.domains = tuple(domains)
+        self._slot = {d: i for i, d in enumerate(self.domains)}
+        self.stacked = stacked
+        self.versions: Dict[str, int] = {d: 0 for d in self.domains}
+
+    @classmethod
+    def create(cls, adapters_by_domain: Dict[str, dict]) -> "AdapterBank":
+        """Stack one adapter tree per domain into the serving layout."""
+        domains = list(adapters_by_domain)
+        trees = [adapters_by_domain[d] for d in domains]
+        stacked = {}
+        for key in trees[0]:
+            axis = _slot_axis(key)
+            stacked[key] = jax.tree.map(
+                lambda *leaves: jnp.stack(leaves, axis=axis),
+                *(t[key] for t in trees))
+        return cls(domains, stacked)
+
+    # -- addressing ---------------------------------------------------------
+    @property
+    def n_slots(self) -> int:
+        return len(self.domains)
+
+    def slot(self, domain: str) -> int:
+        if domain not in self._slot:
+            raise KeyError(
+                f"domain {domain!r} has no adapter slot "
+                f"(known: {list(self.domains)})")
+        return self._slot[domain]
+
+    def adapter_ids(self, domains: Iterable[str]) -> jax.Array:
+        """Per-row slot ids for a mixed-domain batch."""
+        return jnp.asarray([self.slot(d) for d in domains], jnp.int32)
+
+    def version(self, domain: str) -> int:
+        return self.versions[domain]
+
+    # -- publish / acquire --------------------------------------------------
+    def publish(self, domain: str, adapters: dict) -> None:
+        """Hot-swap one domain's adapters in place (jitted update at the
+        slot; the next wave that reads :attr:`stacked` serves the new
+        version — no stale reads across waves)."""
+        slot = jnp.asarray(self.slot(domain), jnp.int32)
+        self.stacked = _publish_jit(self.stacked, adapters, slot)
+        self.versions[domain] += 1
+
+    def snapshot(self, domain: str) -> dict:
+        """Slice one domain's adapter tree out of the bank (training-side
+        acquire; also the per-domain baseline for parity tests)."""
+        slot = jnp.asarray(self.slot(domain), jnp.int32)
+        return _snapshot_jit(self.stacked, slot)
+
+    # -- serving ------------------------------------------------------------
+    def serving_params(self, backbone: dict) -> dict:
+        """Param tree for the multi-tenant serving/classify path."""
+        return {"backbone": backbone, "adapters": self.stacked}

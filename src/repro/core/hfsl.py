@@ -217,10 +217,14 @@ def make_hfsl_step(cfg, optimizer: Optimizer, loss_fn: Callable, *,
                            microbatches=microbatches)
 
 
+_TRAIN_KEYS = ("adapters_c", "opt", "step")    # donated; backbone never is
+
+
 def make_hfsl_round(cfg, optimizer: Optimizer, loss_fn: Callable, *,
                     steps: int, sync_every: int = 1, clip_norm: float = 0.0,
                     always_sync: bool = False, microbatches: int = 1,
-                    remat: Optional[bool] = None, jit: bool = True) -> Callable:
+                    remat: Optional[bool] = None, jit: bool = True,
+                    donate: bool = False) -> Callable:
     """Fused fine-tuning round: ``steps`` HFSL steps in ONE jitted dispatch.
 
     Returned ``round_fn(state, bank, offset=0) -> (state, metrics)``:
@@ -242,6 +246,14 @@ def make_hfsl_round(cfg, optimizer: Optimizer, loss_fn: Callable, *,
     the per-layer forward under ``jax.checkpoint``) for long-sequence LM
     fine-tuning; None leaves the loss untouched for losses without the knob.
 
+    ``donate=True`` donates the round's *train-state* input buffers
+    (adapters_c / opt / step — never the frozen backbone) to the jit, so
+    XLA reuses them for the round's outputs instead of allocating a second
+    full train state. Only enable it when the caller replaces its state
+    with the returned one (e.g. ``integrated.upgrade``) — the input
+    arrays are invalidated by the call. Parity/baseline harnesses that
+    rerun from a kept initial state must leave it off.
+
     Numerics match ``steps`` sequential :func:`make_hfsl_step` calls on the
     same batches exactly — the two engines share one step body.
     """
@@ -251,17 +263,31 @@ def make_hfsl_round(cfg, optimizer: Optimizer, loss_fn: Callable, *,
                            clip_norm=clip_norm, always_sync=always_sync,
                            microbatches=microbatches)
 
-    def round_fn(state: dict, bank: dict, offset=0) -> tuple[dict, dict]:
+    def round_core(train: dict, backbone, bank: dict, offset
+                   ) -> tuple[dict, dict]:
         epoch = jax.tree.leaves(bank)[0].shape[0]
         off = jnp.asarray(offset, jnp.int32)
 
         def body(carry, i):
             batch = jax.tree.map(lambda x: x[(off + i) % epoch], bank)
-            return step(carry, batch)
+            out, metrics = step({**carry, "backbone": backbone}, batch)
+            return {k: out[k] for k in _TRAIN_KEYS}, metrics
 
-        return jax.lax.scan(body, state, jnp.arange(steps, dtype=jnp.int32))
+        return jax.lax.scan(body, train, jnp.arange(steps, dtype=jnp.int32))
 
-    return jax.jit(round_fn) if jit else round_fn
+    if jit:
+        # donate only the train state (argnum 0): the backbone rides as its
+        # own argument precisely so it is excluded from donation — callers
+        # keep serving from the same frozen backbone buffers.
+        round_core = jax.jit(round_core,
+                             donate_argnums=(0,) if donate else ())
+
+    def round_fn(state: dict, bank: dict, offset=0) -> tuple[dict, dict]:
+        train = {k: state[k] for k in _TRAIN_KEYS}
+        out, metrics = round_core(train, state["backbone"], bank, offset)
+        return {**out, "backbone": state["backbone"]}, metrics
+
+    return round_fn
 
 
 def consensus_params(state: dict) -> dict:

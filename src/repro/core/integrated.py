@@ -7,14 +7,23 @@ the abstract policies; this module is the *runtime* that executes them
 against real models:
 
 - it owns a set of domain edge models (shared frozen backbone + per-domain
-  adapters, paper Fig 3),
-- consumes a request stream (each round demands one domain, §IV-C's
-  "one GAI service per round"),
-- on `produce`: serves the round's requests with the domain's adapters
-  through the batched decode engine (launch/engine.py, one engine call per
-  round) and books profit proportional to measured accuracy,
+  adapters, paper Fig 3) kept device-resident in ONE multi-tenant
+  AdapterBank (core/adapter_bank.py),
+- consumes a request stream (a round may demand one domain or a mix of
+  domains; §IV-C's "one GAI service per round" is the single-domain case),
+- on `produce`: serves the round's requests — mixed-domain rounds
+  included — through the batched decode engine (launch/engine.py) in ONE
+  engine call against the bank: per-request `adapter_ids` select each
+  row's domain adapters inside the batched multi-LoRA kernels, so the
+  round's host work is independent of how many domains the demand mixes
+  (no per-domain param assembly, no per-domain engine drain). Profit is
+  booked proportional to measured accuracy,
 - on `upgrade`: runs an HFSL fine-tuning round for the chosen domain
-  (paying the cost), which raises that domain's future serving accuracy,
+  (paying the cost) and hot-publishes the result into the bank
+  (`AdapterBank.publish` — a jitted in-place slot update), so the very
+  next produce round serves the upgraded adapters (the paper's
+  bidirectional knowledge flow, fine-tune -> serve, with zero host-side
+  re-assembly),
 - keeps the §III metric ledger (latency / compute / comm / energy) via
   core/comm.py.
 
@@ -32,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hfsl
+from repro.core.adapter_bank import AdapterBank
 from repro.core.comm import CostModel, RoundCost
 from repro.core.peft import tree_bytes
 from repro.core.scheduler import SchedulerEnv, mlcp_policy, run_policy
@@ -84,10 +94,6 @@ class IntegratedRuntime:
         self.cm = cost_model or CostModel()
         self.serve_batch = serve_batch
         self.serve_gen = serve_gen
-        # one engine for every domain: adapters are passed per call, so the
-        # compiled generate computation is shared across domains/rounds
-        self.engine = DecodeEngine(cfg, slots=min(serve_slots, serve_batch),
-                                   seed=seed)
         key = jax.random.PRNGKey(seed)
         params = M.init(cfg, key)
         self.backbone = params["backbone"]       # shared frozen FM
@@ -110,11 +116,21 @@ class IntegratedRuntime:
             self.domains[name] = DomainState(
                 name, state["adapters_c"], state["opt"], state["step"])
         # ONE jitted dispatch per fine-tuning round (the decode engine's
-        # twin): steps_per_upgrade scanned HFSL steps, in-scan FedAvg
+        # twin): steps_per_upgrade scanned HFSL steps, in-scan FedAvg.
+        # Input state buffers are donated: upgrade() replaces the domain's
+        # state wholesale, so the round reuses them for its outputs.
         self._round = hfsl.make_hfsl_round(
             cfg, self.opt, M.classify_loss, steps=self.steps,
-            sync_every=self.sync_every)
-        self._classify = jax.jit(lambda p, b: M.classify(p, b, cfg))
+            sync_every=self.sync_every, donate=True)
+        # ONE multi-tenant bank for every domain's serving adapters: waves
+        # and classify calls address it with per-row adapter slot ids, so
+        # serving never assembles per-domain param trees on the host.
+        self.bank = AdapterBank.create(
+            {n: self._consensus_adapters(n) for n in self.domains})
+        self.engine = DecodeEngine(cfg, slots=min(serve_slots, serve_batch),
+                                   seed=seed, bank=self.bank)
+        self._classify = jax.jit(
+            lambda p, b, ids: M.classify(p, b, cfg, adapter_ids=ids))
         self.records: list[RoundRecord] = []
         self._eval_cache: dict[str, dict] = {
             n: tasks[n].dataset(150, seed=seed + 91 + i)
@@ -123,15 +139,21 @@ class IntegratedRuntime:
             self.domains[n].accuracy = self._measure(n)
 
     # -- internals ---------------------------------------------------------
-    def _params_for(self, domain: str) -> dict:
-        d = self.domains[domain]
+    def _consensus_adapters(self, domain: str) -> dict:
+        """Edge view after FedAvg: cluster-mean adapters (what serves)."""
         return hfsl.consensus_params({
-            "backbone": self.backbone, "adapters_c": d.adapters_c})
+            "backbone": self.backbone,
+            "adapters_c": self.domains[domain].adapters_c})["adapters"]
 
     def _measure(self, domain: str) -> float:
+        """Eval accuracy through the bank's multi-tenant classify path
+        (all rows address one slot — same kernels as mixed waves)."""
         data = self._eval_cache[domain]
-        logits = self._classify(self._params_for(domain),
-                                {k: jnp.asarray(v) for k, v in data.items()})
+        ids = jnp.full((data["label"].shape[0],), self.bank.slot(domain),
+                       jnp.int32)
+        logits = self._classify(self.bank.serving_params(self.backbone),
+                                {k: jnp.asarray(v) for k, v in data.items()},
+                                ids)
         return float(jnp.mean(jnp.argmax(logits, -1) == data["label"]))
 
     # -- the two GAI services ----------------------------------------------
@@ -145,6 +167,10 @@ class IntegratedRuntime:
         left off; comm is booked per FedAvg actually fired. The RoundCost
         ledger records examples consumed and measured ex_per_s — the
         fine-tuning twin of produce()'s tokens / tok_per_s.
+
+        The round's consensus adapters are hot-published into the serving
+        AdapterBank (jitted in-place slot update — no host transfer), so
+        the next produce round serves the upgraded model immediately.
         """
         d = self.domains[domain]
         bank = self._banks[domain]
@@ -158,6 +184,7 @@ class IntegratedRuntime:
         d.adapters_c, d.opt_state, d.step = \
             state["adapters_c"], state["opt"], state["step"]
         d.level += 1
+        self.bank.publish(domain, self._consensus_adapters(domain))
         d.accuracy = self._measure(domain)
         examples = self.steps * self.n_clusters * self.batch
         seq = bank.arrays["tokens"].shape[-1]
@@ -169,25 +196,52 @@ class IntegratedRuntime:
                          examples=examples)
         return -self.upgrade_cost, cost
 
-    def produce(self, domain: str) -> tuple[float, RoundCost]:
-        """Serve one round of inference requests for `domain`.
+    def produce(self, domain) -> tuple[float, RoundCost]:
+        """Serve one round of inference requests.
 
-        The round's generative requests go through the batched decode
-        engine in ONE engine call (queue -> fixed slots -> fused
-        scan-generation waves); profit is booked from the domain head's
-        measured accuracy on the same requests. The RoundCost ledger
+        ``domain`` is one domain name or a sequence of names (mixed-domain
+        demand): the round's ``serve_batch`` requests are split across the
+        demanded domains and drained through the decode engine in ONE
+        engine call against the AdapterBank — waves freely mix rows from
+        different domains (per-row adapter_ids inside the batched
+        multi-LoRA kernels), so per-round host work does not grow with the
+        number of domains. Profit is booked from each row's own domain
+        head via the same multi-tenant classify path. The RoundCost ledger
         records the engine's measured serving latency and token count, so
         ``cost.tok_per_s`` is the round's decode throughput.
         """
-        task = self.tasks[domain]
-        reqs = task.dataset(self.serve_batch, seed=len(self.records) + 123)
-        params = self._params_for(domain)
+        domains = [domain] if isinstance(domain, str) else list(domain)
+        base, rem = divmod(self.serve_batch, len(domains))
+        rows: list[tuple[str, np.ndarray, int]] = []   # (domain, tokens, label)
+        for i, d in enumerate(domains):
+            cnt = base + (1 if i < rem else 0)
+            if cnt == 0:
+                continue
+            data = self.tasks[d].dataset(cnt,
+                                         seed=len(self.records) + 123 + i)
+            rows += [(d, np.asarray(data["tokens"][j]),
+                      int(data["label"][j])) for j in range(cnt)]
+        params = self.bank.serving_params(self.backbone)
         t0 = time.time()
-        _, stats = self.engine.serve(params, reqs["tokens"],
-                                     gen=self.serve_gen)
-        logits = self._classify(params,
-                                {k: jnp.asarray(v) for k, v in reqs.items()})
-        acc = float(jnp.mean(jnp.argmax(logits, -1) == reqs["label"]))
+        for d, toks, _ in rows:                        # ONE drain, mixed waves
+            self.engine.submit(toks, self.serve_gen, domain=d)
+        _, stats = self.engine.run(params)
+        # accuracy through the bank: rows grouped by prompt length only
+        # (one classify call in the common equal-length case), each row
+        # scored by its own domain's stacked head
+        correct = 0
+        by_len: dict[int, list[int]] = {}
+        for j, (_, toks, _) in enumerate(rows):
+            by_len.setdefault(len(toks), []).append(j)
+        for idxs in by_len.values():
+            batch = {"tokens": jnp.asarray(
+                np.stack([rows[j][1] for j in idxs]))}
+            ids = self.bank.adapter_ids([rows[j][0] for j in idxs])
+            logits = self._classify(params, batch, ids)
+            pred = np.asarray(jnp.argmax(logits, -1))
+            correct += int(np.sum(pred == np.asarray(
+                [rows[j][2] for j in idxs])))
+        acc = correct / max(len(rows), 1)
         # latency covers the whole round (engine waves + the accuracy
         # forward); stats.wall_s is the pure decode-serving share
         nbytes = self.serve_batch * (self.cfg.peft.head_dim_out * 4

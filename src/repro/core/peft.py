@@ -78,7 +78,6 @@ def merge_lora_into_backbone(params: dict, cfg) -> dict:
     prompts untouched (they are runtime inputs, not weight deltas).
     Works on the stacked (L, ...) layout via einsum over the layer dim.
     """
-    import copy
     out = jax.tree.map(lambda x: x, params)      # shallow-ish copy
     scale = cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1)
     stack = out["adapters"].get("stack", {})

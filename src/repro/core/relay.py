@@ -12,6 +12,14 @@ The edge server is the buffer between GAI (cloud FM) and EI (end clusters):
 "Data-free" is structural: only adapter pytrees ever cross a tier boundary
 — never tokens, activations, or labels. Every transfer is metered in bytes
 (parameter-efficient vs parameter-full, §III-A.2) through core/comm.py.
+
+Attached to a multi-tenant serving bank (core/adapter_bank.py, via
+``attach_bank``), every edge-adapter update the relay performs —
+cloud delivery and end-cluster absorption — is hot-published into the
+domain's bank slot, so the serving tier always decodes with the adapters
+the relay says are current. The relay stays authoritative: its version
+counters are mirrored into the bank and its ledger meters the bytes; the
+bank is just the device-resident serving copy.
 """
 from __future__ import annotations
 
@@ -48,7 +56,7 @@ class KnowledgeRelay:
     """Versioned adapter store for one cloud + N domain edges."""
 
     def __init__(self, cloud_adapters: dict, domains: list[str],
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None, bank=None):
         self.cloud = cloud_adapters
         self.cloud_version = 0
         self.edges = {d: jax.tree.map(lambda x: x, cloud_adapters)
@@ -57,6 +65,26 @@ class KnowledgeRelay:
         self.ledger = Ledger()
         self.cm = cost_model or CostModel()
         self.cost = RoundCost(0, 0, 0, 0, 0)
+        self.bank = None
+        if bank is not None:
+            self.attach_bank(bank)
+
+    def attach_bank(self, bank) -> None:
+        """Route this relay's edge updates into a serving AdapterBank:
+        every deliver/absorb hot-publishes the domain's new adapters to its
+        bank slot. The relay's edge_versions stay the authoritative logical
+        versions; the bank's own counter just counts publishes to the slot
+        (it may have other writers, e.g. integrated.upgrade)."""
+        missing = [d for d in self.edges if d not in bank.domains]
+        if missing:
+            raise KeyError(f"bank has no slot for domains {missing}")
+        self.bank = bank
+        for d in self.edges:                   # seed serving with relay state
+            self._publish(d)
+
+    def _publish(self, domain: str) -> None:
+        if self.bank is not None:
+            self.bank.publish(domain, self.edges[domain])
 
     # -- cloud-edge subnetwork (domain-across, large-scale flow) ----------
     def cloud_deliver(self, domain: str) -> dict:
@@ -67,6 +95,7 @@ class KnowledgeRelay:
         self.cost = self.cost + transfer_cost(nb, self.cm.backhaul)
         self.edges[domain] = jax.tree.map(lambda x: x, self.cloud)
         self.edge_versions[domain] = self.cloud_version
+        self._publish(domain)
         return self.edges[domain]
 
     def cloud_aggregate(self, domains: Optional[list[str]] = None) -> dict:
@@ -99,4 +128,5 @@ class KnowledgeRelay:
             self.cost = self.cost + transfer_cost(nb, self.cm.cs)
         self.edges[domain] = _avg(cluster_adapters)
         self.edge_versions[domain] += 1
+        self._publish(domain)
         return self.edges[domain]

@@ -551,6 +551,66 @@ def _lora_bwd_xla(x, dy, a, b, scale):
     return da, db
 
 
+def lora_bgmv(x, w, a, b, adapter_ids, scale: float = 1.0, bias=None, *,
+              backend: Optional[str] = None):
+    """Multi-tenant LoRA matmul: per-row adapter selection from a stacked
+    bank (kernels/lora_bgmv.py; serving-only, no VJP).
+
+    x: (M, K) with adapter_ids (M,), or (B, S, K) with adapter_ids (B,).
+    a: (n_slots, K, r); b: (n_slots, r, N); ids in [0, n_slots).
+    Row i gets ``x_i @ w + scale * (x_i @ a[id_i]) @ b[id_i]`` (+ bias) —
+    bit-identical per row to :func:`lora_matmul` with that row's adapter,
+    which is what makes mixed-domain waves match per-domain serving
+    token-for-token.
+    """
+    ids = jnp.asarray(adapter_ids, jnp.int32)
+    # ids address x's LEADING dim on every backend: rows for 2D x, whole
+    # sequences for 3D x. Reject per-token ids for 3D x here — the XLA
+    # fallback would happily broadcast them while the gathered Pallas path
+    # reads only ids[0:B], a silent cross-backend divergence.
+    if ids.shape != (x.shape[0],):
+        raise ValueError(
+            f"adapter_ids {ids.shape} must be ({x.shape[0]},): one id per "
+            f"{'sequence' if x.ndim == 3 else 'row'} of x {x.shape}")
+    impl = _pick(backend)
+    if impl in ("pallas", "interpret"):
+        from repro.kernels import lora_bgmv as bk
+        interp = impl == "interpret"
+        if x.ndim == 3 and x.shape[1] > 1:         # prefill: gathered path
+            return bk.lora_bgmv_seq_pallas(x, w, a, b, ids, float(scale),
+                                           bias, interpret=interp)
+        shp = x.shape                               # decode rows: BGMV path
+        out = bk.lora_bgmv_rows_pallas(x.reshape(-1, shp[-1]), w, a, b, ids,
+                                       float(scale), bias, interpret=interp)
+        return out.reshape(*shp[:-1], w.shape[-1])
+    return _bgmv_xla(x, w, a, b, ids, float(scale), bias)
+
+
+def _bgmv_xla(x, w, a, b, ids, scale, bias=None):
+    """Segment-matmul fallback: sweep the (static) slot dim with disjoint
+    row masks instead of gathering (M, K, r) adapter copies. Per-row math
+    mirrors :func:`_lora_xla` exactly (native-dtype dots, f32 accumulation,
+    same cast points) so single- and multi-tenant serving agree bitwise.
+    """
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1])
+    if ids.shape[0] != x2.shape[0]:                # per-sequence -> per-row
+        ids = jnp.repeat(ids, shp[1])
+    y = jax.lax.dot_general(x2, w, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    mask = ids[:, None]
+    for s in range(a.shape[0]):                    # static slot sweep
+        xs = jnp.where(mask == s, x2, jnp.zeros((), x2.dtype))
+        u = jax.lax.dot_general(xs, a[s], (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        y = y + scale * jax.lax.dot_general(
+            u.astype(x2.dtype), b[s], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype).reshape(*shp[:-1], w.shape[-1])
+
+
 def _lora_xla(x, w, a, b, scale, bias=None):
     """Native-dtype dots with f32 accumulation (what the MXU does).
 

@@ -154,6 +154,31 @@ def lora_matmul(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
     return y.astype(x.dtype)
 
 
+def lora_bgmv(x: jax.Array, w: jax.Array, a_stack: jax.Array,
+              b_stack: jax.Array, adapter_ids: jax.Array, scale: float,
+              bias: Optional[jax.Array] = None) -> jax.Array:
+    """Naive multi-LoRA matmul: per-row adapter gather, f32 math.
+
+    x: (M, K) with adapter_ids (M,), or (B, S, K) with adapter_ids (B,)
+    (one adapter per sequence). a_stack: (n_slots, K, r);
+    b_stack: (n_slots, r, N). Row i computes
+    ``x_i @ w + scale * (x_i @ a[id_i]) @ b[id_i]`` (+ bias).
+    """
+    shp = x.shape
+    x2 = x.reshape(-1, shp[-1]).astype(jnp.float32)
+    ids = jnp.asarray(adapter_ids, jnp.int32)
+    if ids.shape[0] != x2.shape[0]:                # per-sequence -> per-row
+        ids = jnp.repeat(ids, shp[1])
+    a_sel = a_stack.astype(jnp.float32)[ids]       # (M, K, r)
+    b_sel = b_stack.astype(jnp.float32)[ids]       # (M, r, N)
+    y = x2 @ w.astype(jnp.float32)
+    u = jnp.einsum("mk,mkr->mr", x2, a_sel)
+    y = y + scale * jnp.einsum("mr,mrn->mn", u, b_sel)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype).reshape(*shp[:-1], w.shape[-1])
+
+
 def lora_matmul_bwd(x: jax.Array, w: jax.Array, a: jax.Array, b: jax.Array,
                     scale: float, dy: jax.Array):
     """Naive einsum VJP of :func:`lora_matmul` wrt (x, a, b) — f32 math.

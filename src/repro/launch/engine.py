@@ -29,6 +29,17 @@ with the request (``submit(..., extras={...})``): waves stack the rows in
 slot order, so each request stays bound to its own conditioning even when
 length-bucketing reorders the queue. Every request in one drain must agree
 on the extras keys (or carry none).
+
+**Multi-tenant serving**: constructed with an
+:class:`~repro.core.adapter_bank.AdapterBank`, requests gain a ``domain``
+field (``submit(..., domain=...)``) and one wave freely mixes requests
+from different domains — each row's slot id is resolved against the bank
+and threaded to the batched multi-LoRA kernels as per-row ``adapter_ids``.
+Length-bucketing no longer implies domain-bucketing, and the bank's
+stacked adapters are re-read at every wave, so an
+``AdapterBank.publish`` between waves is served by the very next wave
+(no stale reads). Mixed-domain waves are token-for-token identical to
+draining each domain alone with its merged params.
 """
 from __future__ import annotations
 
@@ -50,6 +61,7 @@ class Request:
     tokens: np.ndarray                 # (S,) int32 prompt
     max_new_tokens: int
     extras: Optional[dict] = None      # per-request modality rows (no batch dim)
+    domain: Optional[str] = None       # multi-tenant: AdapterBank slot owner
 
 
 @dataclasses.dataclass
@@ -94,10 +106,11 @@ class DecodeEngine:
     """Packs queued requests into fixed slots and serves them in waves."""
 
     def __init__(self, cfg, *, slots: int = 8, greedy: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, bank=None):
         self.cfg = cfg
         self.slots = slots
         self.greedy = greedy
+        self.bank = bank                   # Optional[AdapterBank]: multi-tenant
         self.slot_table = [Slot() for _ in range(slots)]
         self._queue: deque[Request] = deque()
         self._uid = 0
@@ -105,14 +118,32 @@ class DecodeEngine:
 
     # -- queue --------------------------------------------------------------
     def submit(self, tokens, max_new_tokens: int = 8,
-               extras: Optional[dict] = None) -> int:
+               extras: Optional[dict] = None,
+               domain: Optional[str] = None) -> int:
         """Enqueue one request; returns its uid. ``extras`` is one modality
         row per key (e.g. ``{"vision_embeds": (n_vis, d)}`` — no batch dim);
-        it stays bound to this request across wave packing."""
+        it stays bound to this request across wave packing. ``domain`` names
+        this request's adapter slot in the engine's AdapterBank (multi-tenant
+        serving); it too stays bound across packing."""
+        if domain is not None:
+            if self.bank is None:
+                raise ValueError("submit(domain=...) requires an engine "
+                                 "constructed with an AdapterBank")
+            self.bank.slot(domain)             # fail fast on unknown domains
+        # enforce the all-or-none tenancy invariant at the door (rejecting
+        # the offending request, not poisoning the queue): length bucketing
+        # could otherwise separate tenant-addressed and merged-param
+        # requests into different waves, where the mix would surface as a
+        # shape error deep inside the projection kernels (stacked adapter
+        # leaves served without adapter_ids).
+        if self._queue and (domain is None) != (self._queue[0].domain is None):
+            raise ValueError("all requests in a drain must carry a domain "
+                             "or none (mixing tenant-addressed and "
+                             "merged-param requests is ambiguous)")
         uid = self._uid
         self._uid += 1
         self._queue.append(Request(uid, np.asarray(tokens, np.int32),
-                                   int(max_new_tokens), extras))
+                                   int(max_new_tokens), extras, domain))
         return uid
 
     def pending(self) -> int:
@@ -151,9 +182,22 @@ class DecodeEngine:
                                         + [np.asarray(wave[-1].extras[k])] * pad))
                 for k in keys}
 
+    def _wave_adapter_ids(self, wave: list[Request]):
+        """Per-slot bank slot ids (padding replicates the last live row's
+        id, mirroring the prompt padding). None for single-tenant waves."""
+        if all(r.domain is None for r in wave):
+            return None
+        doms = [r.domain for r in wave]
+        doms += [doms[-1]] * (self.slots - len(wave))
+        return self.bank.adapter_ids(doms)
+
     def run(self, params) -> tuple[list[Completion], EngineStats]:
         """Drain the queue: pack -> one generate_scan dispatch per wave ->
-        recycle completed slots. Returns (completions, stats)."""
+        recycle completed slots. Returns (completions, stats).
+
+        Multi-tenant drains (domain-carrying requests against a bank)
+        re-read ``bank.stacked`` per wave, so a publish() between waves is
+        served immediately."""
         stats = EngineStats()
         out: list[Completion] = []
         t_all = time.time()
@@ -167,11 +211,15 @@ class DecodeEngine:
             key = None
             if not self.greedy:
                 self._key, key = jax.random.split(self._key)
+            ids = self._wave_adapter_ids(wave)
+            wave_params = params if ids is None else \
+                {**params, "adapters": self.bank.stacked}
             t0 = time.time()
-            toks = M.generate_scan(params, self.cfg, jnp.asarray(prompts),
-                                   gen=gen,
+            toks = M.generate_scan(wave_params, self.cfg,
+                                   jnp.asarray(prompts), gen=gen,
                                    extra_batch=self._wave_extras(wave),
-                                   greedy=self.greedy, key=key)
+                                   greedy=self.greedy, key=key,
+                                   adapter_ids=ids)
             toks = np.asarray(toks)                # device sync = wave done
             dt = time.time() - t0
             for i, req in enumerate(wave):
@@ -186,17 +234,23 @@ class DecodeEngine:
         return out, stats
 
     def serve(self, params, prompts, *, gen: int,
-              extra_batch: Optional[dict] = None
+              extra_batch: Optional[dict] = None,
+              domains: Optional[list] = None
               ) -> tuple[np.ndarray, EngineStats]:
         """Serve an (N, S) prompt batch in slot-sized waves.
 
         One engine call per round: submits every row (with its
-        ``extra_batch`` row, leading dim N, if given), drains the queue, and
+        ``extra_batch`` row, leading dim N, if given, and its ``domains[i]``
+        adapter slot for multi-tenant rounds), drains the queue, and
         returns ((N, gen) tokens in submission order, stats)."""
         prompts = np.asarray(prompts)
+        if domains is not None and len(domains) != len(prompts):
+            raise ValueError(f"domains ({len(domains)}) must name one "
+                             f"adapter slot per prompt ({len(prompts)})")
         uids = [self.submit(p, gen,
                             extras=None if extra_batch is None else
-                            {k: np.asarray(v[i]) for k, v in extra_batch.items()})
+                            {k: np.asarray(v[i]) for k, v in extra_batch.items()},
+                            domain=None if domains is None else domains[i])
                 for i, p in enumerate(prompts)]
         comps, stats = self.run(params)
         by_uid = {c.uid: c.tokens for c in comps}

@@ -48,45 +48,64 @@ def attn_spec(cfg: ModelConfig) -> dict:
     return s
 
 
-def _proj(x, w, bias, lora, scale):
+def _proj(x, w, bias, lora, scale, adapter_ids=None):
     """Projection with optional LoRA branch (kernel-dispatched).
 
     Both training and inference traverse ops.lora_matmul: its custom VJP
     keeps the fused kernel usable under ``jax.grad`` (adapter grads only —
     the frozen ``dW`` is never formed), so the HFSL fine-tuning round and
     the decode path share one projection fast path.
+
+    Multi-tenant serving passes ``adapter_ids`` (one slot id per batch row)
+    with ``lora`` leaves carrying a leading ``n_slots`` dim (the
+    AdapterBank layout); the projection then dispatches to the batched
+    multi-LoRA kernel so one wave mixes adapters from different domains.
     """
     if lora is not None:
         shp = x.shape
+        if adapter_ids is not None:
+            return kops.lora_bgmv(x, w, lora["a"], lora["b"], adapter_ids,
+                                  scale, bias)
         y = kops.lora_matmul(x.reshape(-1, shp[-1]), w, lora["a"], lora["b"],
                              scale, bias)
         return y.reshape(*shp[:-1], w.shape[-1])
     return kops.lora_matmul(x, w, bias=bias)
 
 
-def _qkv(params, adapters, x, cfg: ModelConfig, kv_x=None):
+def _qkv(params, adapters, x, cfg: ModelConfig, kv_x=None, adapter_ids=None):
     """Compute q, k, v with LoRA; reshape to (B, S, H, D)."""
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     lora = (adapters or {}).get("lora", {})
     lscale = cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1)
     kv_in = x if kv_x is None else kv_x
-    q = _proj(x, params["wq"], params.get("bq"), lora.get("q"), lscale)
-    k = _proj(kv_in, params["wk"], params.get("bk"), lora.get("k"), lscale)
-    v = _proj(kv_in, params["wv"], params.get("bv"), lora.get("v"), lscale)
+    q = _proj(x, params["wq"], params.get("bq"), lora.get("q"), lscale,
+              adapter_ids)
+    k = _proj(kv_in, params["wk"], params.get("bk"), lora.get("k"), lscale,
+              adapter_ids)
+    v = _proj(kv_in, params["wv"], params.get("bv"), lora.get("v"), lscale,
+              adapter_ids)
     B, S = x.shape[:2]
     Skv = kv_in.shape[1]
     return (q.reshape(B, S, nh, hd), k.reshape(B, Skv, nkv, hd),
             v.reshape(B, Skv, nkv, hd))
 
 
-def _with_prefix(k, v, adapters, B):
-    """Prepend per-layer prefix-KV slots (broadcast over batch)."""
+def _with_prefix(k, v, adapters, B, adapter_ids=None):
+    """Prepend per-layer prefix-KV slots (broadcast over batch; with
+    ``adapter_ids`` each row gathers its own domain's slots from the
+    stacked (n_slots, n_p, Hkv, D) bank)."""
     pfx = (adapters or {}).get("prefix")
     if pfx is None:
         return k, v, 0
-    n_p = pfx["k"].shape[0]
-    pk = jnp.broadcast_to(pfx["k"][None], (B, *pfx["k"].shape)).astype(k.dtype)
-    pv = jnp.broadcast_to(pfx["v"][None], (B, *pfx["v"].shape)).astype(v.dtype)
+    if adapter_ids is not None:
+        pk = jnp.take(pfx["k"], adapter_ids, axis=0).astype(k.dtype)
+        pv = jnp.take(pfx["v"], adapter_ids, axis=0).astype(v.dtype)
+    else:
+        pk = jnp.broadcast_to(pfx["k"][None],
+                              (B, *pfx["k"].shape)).astype(k.dtype)
+        pv = jnp.broadcast_to(pfx["v"][None],
+                              (B, *pfx["v"].shape)).astype(v.dtype)
+    n_p = pk.shape[1]
     return jnp.concatenate([pk, k], 1), jnp.concatenate([pv, v], 1), n_p
 
 
@@ -101,10 +120,11 @@ def attention_seq(params: dict, adapters: Optional[dict], x: jax.Array,
                   kv_positions: Optional[jax.Array] = None,
                   use_rope: bool = True,
                   make_cache: bool = False,
-                  cache_len: Optional[int] = None):
+                  cache_len: Optional[int] = None,
+                  adapter_ids: Optional[jax.Array] = None):
     """Returns (out (B,S,d_model), cache or None)."""
     B, S = x.shape[:2]
-    q, k, v = _qkv(params, adapters, x, cfg, kv_x)
+    q, k, v = _qkv(params, adapters, x, cfg, kv_x, adapter_ids)
     kv_positions = positions if kv_positions is None else kv_positions
     if kv_x is None and use_rope:                          # self-attention: RoPE
         q = rope(q, positions, cfg.rope_theta)
@@ -113,7 +133,7 @@ def attention_seq(params: dict, adapters: Optional[dict], x: jax.Array,
     k = shard(k, "batch", "attn_seq", "kv_heads", "head_dim")
     v = shard(v, "batch", "attn_seq", "kv_heads", "head_dim")
 
-    kp, vp, n_p = _with_prefix(k, v, adapters, B)
+    kp, vp, n_p = _with_prefix(k, v, adapters, B, adapter_ids)
     kv_pos = jnp.concatenate(
         [jnp.full((n_p,), -1, jnp.int32), kv_positions.astype(jnp.int32)]) \
         if n_p else kv_positions.astype(jnp.int32)
@@ -124,7 +144,7 @@ def attention_seq(params: dict, adapters: Optional[dict], x: jax.Array,
     out = out.reshape(B, S, -1)
     y = _proj(out, params["wo"], None,
               (adapters or {}).get("lora", {}).get("o"),
-              cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1))
+              cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1), adapter_ids)
     y = shard(y, "batch", "seq", "d_model")
 
     cache = None
@@ -160,15 +180,18 @@ def attention_seq(params: dict, adapters: Optional[dict], x: jax.Array,
 def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
                      cache: dict, cfg: ModelConfig, *, pos: jax.Array,
                      window: int = 0, cross: bool = False,
-                     use_rope: bool = True):
+                     use_rope: bool = True,
+                     adapter_ids: Optional[jax.Array] = None):
     """x: (B, 1, d). cache: {'k','v','pos'} (+ static for cross). Returns
-    (out, new_cache)."""
+    (out, new_cache). ``adapter_ids`` selects each row's adapter from
+    stacked (n_slots, ...) adapter leaves (multi-tenant serving)."""
     B = x.shape[0]
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     lora = (adapters or {}).get("lora", {})
     lscale = cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1)
 
-    q = _proj(x, params["wq"], params.get("bq"), lora.get("q"), lscale)
+    q = _proj(x, params["wq"], params.get("bq"), lora.get("q"), lscale,
+              adapter_ids)
     q = q.reshape(B, 1, nh, hd)
 
     if cross:
@@ -178,8 +201,10 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
     else:
         if use_rope:
             q = rope(q, pos[None].astype(jnp.int32)[None], cfg.rope_theta)
-        k1 = _proj(x, params["wk"], params.get("bk"), lora.get("k"), lscale)
-        v1 = _proj(x, params["wv"], params.get("bv"), lora.get("v"), lscale)
+        k1 = _proj(x, params["wk"], params.get("bk"), lora.get("k"), lscale,
+                   adapter_ids)
+        v1 = _proj(x, params["wv"], params.get("bv"), lora.get("v"), lscale,
+                   adapter_ids)
         k1 = k1.reshape(B, 1, nkv, hd)
         if use_rope:
             k1 = rope(k1, pos[None].astype(jnp.int32)[None], cfg.rope_theta)
@@ -203,14 +228,20 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
     # the Pallas path is the split-KV flash-decode kernel
     # (kernels/flash_decode.py) with length-aware sentinel masking.
     pfx = (adapters or {}).get("prefix") if not cross else None
+    pfx_k = pfx_v = None
+    if pfx is not None:
+        if adapter_ids is not None:                # per-row domain prefix
+            pfx_k = jnp.take(pfx["k"], adapter_ids, axis=0)
+            pfx_v = jnp.take(pfx["v"], adapter_ids, axis=0)
+        else:
+            pfx_k, pfx_v = pfx["k"], pfx["v"]
     o = kops.flash_decode(
         q[:, 0], k, v, q_pos=pos.astype(jnp.int32),
         kv_pos=kv_pos.astype(jnp.int32),
-        prefix_k=None if pfx is None else pfx["k"],
-        prefix_v=None if pfx is None else pfx["v"],
+        prefix_k=pfx_k, prefix_v=pfx_v,
         window=0 if cross else window, causal=not cross)
     o = o.reshape(B, 1, nh * hd).astype(x.dtype)
-    y = _proj(o, params["wo"], None, lora.get("o"), lscale)
+    y = _proj(o, params["wo"], None, lora.get("o"), lscale, adapter_ids)
     return y, new_cache
 
 

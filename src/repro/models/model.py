@@ -123,11 +123,21 @@ def _embed_inputs(params: dict, batch: dict, cfg: ModelConfig):
 
 
 def forward(params: dict, batch: dict, cfg: ModelConfig, *,
-            mode: str = "train", remat: Optional[bool] = None) -> dict:
-    """Full-sequence forward. Returns {'hidden', 'logits', 'aux'}."""
+            mode: str = "train", remat: Optional[bool] = None,
+            adapter_ids: Optional[jax.Array] = None) -> dict:
+    """Full-sequence forward. Returns {'hidden', 'logits', 'aux'}.
+
+    ``adapter_ids`` (B,) enables multi-tenant serving: adapter stack leaves
+    carry an ``n_slots`` dim after the layer dim (the AdapterBank serving
+    layout) and each batch row computes with its own domain's adapters.
+    """
     remat = (mode == "train") if remat is None else remat
     adapters = params.get("adapters", {}).get("stack", {})
     if cfg.family == "audio":
+        if adapter_ids is not None:
+            raise NotImplementedError(
+                "multi-tenant adapter_ids not supported for the audio "
+                "encoder-decoder family")
         enc_out = encdec.encode(params["backbone"]["encdec"], adapters,
                                 batch["frames"], cfg, remat=remat)
         tok_emb = embed(params["backbone"]["embed"], batch["tokens"])
@@ -137,7 +147,8 @@ def forward(params: dict, batch: dict, cfg: ModelConfig, *,
     else:
         x, positions, _ = _embed_inputs(params, batch, cfg)
         x, _, aux = stack_seq(params["backbone"]["layers"], adapters, x, cfg,
-                              positions=positions, remat=remat)
+                              positions=positions, remat=remat,
+                              adapter_ids=adapter_ids)
     x = rmsnorm(params["backbone"]["final_norm"], x)
     head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
     logits = unembed(head_tbl, x)
@@ -157,11 +168,21 @@ def lm_loss(params: dict, batch: dict, cfg: ModelConfig, *,
 
 
 def classify(params: dict, batch: dict, cfg: ModelConfig, *,
-             remat: bool = False) -> jax.Array:
-    """Paper case-study head: mean-pool hidden states -> adapter head logits."""
-    out = forward(params, batch, cfg, mode="eval", remat=remat)
+             remat: bool = False,
+             adapter_ids: Optional[jax.Array] = None) -> jax.Array:
+    """Paper case-study head: mean-pool hidden states -> adapter head logits.
+
+    With ``adapter_ids`` the head is stacked (n_slots, d, out) and each row
+    is scored by its own domain's head (mixed-domain accuracy in one call).
+    """
+    out = forward(params, batch, cfg, mode="eval", remat=remat,
+                  adapter_ids=adapter_ids)
     pooled = jnp.mean(out["hidden"].astype(jnp.float32), axis=1)
     h = params["adapters"]["head"]
+    if adapter_ids is not None:
+        w = jnp.take(h["w"], adapter_ids, axis=0)      # (B, d, out)
+        b = jnp.take(h["b"], adapter_ids, axis=0)      # (B, out)
+        return jnp.einsum("bd,bdo->bo", pooled, w) + b
     return pooled @ h["w"] + h["b"]
 
 
@@ -178,12 +199,17 @@ def classify_loss(params: dict, batch: dict, cfg: ModelConfig) -> tuple[jax.Arra
 
 
 def prefill(params: dict, batch: dict, cfg: ModelConfig,
-            max_len: Optional[int] = None) -> tuple[jax.Array, dict]:
+            max_len: Optional[int] = None,
+            adapter_ids: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
     """Run the prompt, build caches (padded to max_len for decoding into).
 
     Returns (last-token logits, caches)."""
     adapters = params.get("adapters", {}).get("stack", {})
     if cfg.family == "audio":
+        if adapter_ids is not None:
+            raise NotImplementedError(
+                "multi-tenant adapter_ids not supported for the audio "
+                "encoder-decoder family")
         enc_out = encdec.encode(params["backbone"]["encdec"], adapters,
                                 batch["frames"], cfg)
         tok_emb = embed(params["backbone"]["embed"], batch["tokens"])
@@ -194,7 +220,8 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig,
         x, positions, _ = _embed_inputs(params, batch, cfg)
         x, caches, _ = stack_seq(params["backbone"]["layers"], adapters, x,
                                  cfg, positions=positions, make_cache=True,
-                                 remat=False, cache_len=max_len)
+                                 remat=False, cache_len=max_len,
+                                 adapter_ids=adapter_ids)
     x = rmsnorm(params["backbone"]["final_norm"], x[:, -1:])
     head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
     return unembed(head_tbl, x), caches
@@ -212,16 +239,19 @@ def _generate_fn(cfg: ModelConfig, gen: int, greedy: bool):
     shape as usual.
     """
 
-    def impl(params: dict, batch: dict, key: jax.Array) -> jax.Array:
+    def impl(params: dict, batch: dict, key: jax.Array,
+             adapter_ids) -> jax.Array:
         S = batch["tokens"].shape[1]
         n_vis = cfg.vlm.n_vis_tokens if cfg.family == "vlm" else 0
-        logits, caches = prefill(params, batch, cfg, max_len=S + n_vis + gen)
+        logits, caches = prefill(params, batch, cfg, max_len=S + n_vis + gen,
+                                 adapter_ids=adapter_ids)
         tok0 = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
 
         def step(carry, i):
             tok, caches, key = carry
             pos = jnp.asarray(S + n_vis, jnp.int32) + i
-            logits, caches = decode_step(params, tok, caches, pos, cfg)
+            logits, caches = decode_step(params, tok, caches, pos, cfg,
+                                         adapter_ids=adapter_ids)
             if greedy:
                 nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
             else:
@@ -239,7 +269,8 @@ def _generate_fn(cfg: ModelConfig, gen: int, greedy: bool):
 def generate_scan(params: dict, cfg: ModelConfig, prompts: jax.Array, *,
                   gen: int, extra_batch: Optional[dict] = None,
                   greedy: bool = True,
-                  key: Optional[jax.Array] = None) -> jax.Array:
+                  key: Optional[jax.Array] = None,
+                  adapter_ids: Optional[jax.Array] = None) -> jax.Array:
     """Single-dispatch generation: prefill + scanned decode in one jit call.
 
     prompts: (B, S) int32. Returns (B, gen) generated tokens. Matches the
@@ -247,15 +278,24 @@ def generate_scan(params: dict, cfg: ModelConfig, prompts: jax.Array, *,
     the first emitted token is the prefill argmax, subsequent tokens are
     argmax (greedy) or categorical samples drawn with the same per-step key
     splits.
+
+    ``adapter_ids`` (B,) int32 serves a multi-tenant wave: params carry the
+    AdapterBank stacked-adapter layout and row i generates with adapter
+    slot ``adapter_ids[i]`` — token-for-token equal to serving row i alone
+    with that slot's adapters.
     """
     batch = {"tokens": prompts, **(extra_batch or {})}
     if greedy or key is None:
         greedy, key = True, jax.random.PRNGKey(0)          # key unused
-    return _generate_fn(cfg, int(gen), bool(greedy))(params, batch, key)
+    ids = None if adapter_ids is None else \
+        jnp.asarray(adapter_ids, jnp.int32)
+    return _generate_fn(cfg, int(gen), bool(greedy))(params, batch, key, ids)
 
 
 def decode_step(params: dict, token: jax.Array, caches: dict,
-                pos: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+                pos: jax.Array, cfg: ModelConfig,
+                adapter_ids: Optional[jax.Array] = None
+                ) -> tuple[jax.Array, dict]:
     """One token. token: (B, 1) int32; pos: scalar int32 (current position)."""
     adapters = params.get("adapters", {}).get("stack", {})
     x = embed(params["backbone"]["embed"], token)
@@ -265,7 +305,8 @@ def decode_step(params: dict, token: jax.Array, caches: dict,
                                        x, caches, cfg, pos=pos)
     else:
         x, caches = stack_decode(params["backbone"]["layers"], adapters, x,
-                                 caches, cfg, pos=pos)
+                                 caches, cfg, pos=pos,
+                                 adapter_ids=adapter_ids)
     x = rmsnorm(params["backbone"]["final_norm"], x)
     head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
     logits = unembed(head_tbl, x)

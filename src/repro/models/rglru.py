@@ -50,7 +50,19 @@ def rglru_seq(params: dict, adapters: Optional[dict], x: jax.Array,
     i_gate = xc @ params["w_i"]
     h0 = None
     if adapters is not None and "state0" in adapters:
-        h0 = jnp.broadcast_to(adapters["state0"][None], (B, cfg.lru_width))
+        s0 = adapters["state0"]
+        # (W,) shared prompt, or (B, W) per-row (multi-tenant gather).
+        # An UNgathered (n_slots, W) bank leaf with n_slots == B would
+        # pass this guard undetected — serving stacked bank params without
+        # adapter_ids is the caller's contract to uphold (the engine
+        # enforces it at submit time).
+        if s0.ndim == 2 and s0.shape[0] != B:
+            raise ValueError(
+                f"state0 {s0.shape} is neither a shared (W,) prompt nor a "
+                f"per-row (B={B}, W) gather — stacked bank leaves must be "
+                "gathered by adapter_ids before reaching the layer")
+        h0 = s0 if s0.ndim == 2 else \
+            jnp.broadcast_to(s0[None], (B, cfg.lru_width))
     hs, hT = kops.rglru(xc, r_gate, i_gate, params["a_param"], h0)
     out = (hs * yb) @ params["out"]
     out = shard(out, "batch", "seq", "d_model")

@@ -75,8 +75,19 @@ def ssm_seq(params: dict, adapters: Optional[dict], x: jax.Array,
     dt, A, Bm, C = _ssm_inputs(params, xc, cfg)
     h0 = None
     if adapters is not None and "state0" in adapters:
-        h0 = jnp.broadcast_to(adapters["state0"][None],
-                              (B, di, cfg.ssm.d_state))
+        s0 = adapters["state0"]
+        # (Di, N) shared prompt, or (B, Di, N) per-row (multi-tenant
+        # gather). An UNgathered (n_slots, Di, N) bank leaf with
+        # n_slots == B would pass this guard undetected — serving stacked
+        # bank params without adapter_ids is the caller's contract to
+        # uphold (the engine enforces it at submit time).
+        if s0.ndim == 3 and s0.shape[0] != B:
+            raise ValueError(
+                f"state0 {s0.shape} is neither a shared (Di, N) prompt nor "
+                f"a per-row (B={B}, Di, N) gather — stacked bank leaves "
+                "must be gathered by adapter_ids before reaching the layer")
+        h0 = s0 if s0.ndim == 3 else \
+            jnp.broadcast_to(s0[None], (B, di, cfg.ssm.d_state))
     y, hT = kops.selective_scan(xc, dt, A, Bm, C, params["D"], h0)
     y = y * jax.nn.silu(z)
     out = y @ params["out_proj"]

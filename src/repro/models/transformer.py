@@ -161,17 +161,27 @@ def cache_group_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
 # Sub-layer application
 # ---------------------------------------------------------------------------
 
+def _select_state0(a: dict, adapter_ids):
+    """Gather each row's state prompt from a stacked (n_slots, ...) bank."""
+    if adapter_ids is None or not a or "state0" not in a:
+        return a
+    return {**a, "state0": jnp.take(a["state0"], adapter_ids, axis=0)}
+
+
 def _apply_seq(kind: str, p: dict, a: dict, x, cfg: ModelConfig, *,
-               positions, make_cache: bool, cache_len=None):
+               positions, make_cache: bool, cache_len=None,
+               adapter_ids=None):
     """Full-sequence sub-layer. Returns (x, cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     cache = None
     if kind == "ssm":
-        h, cache = ssm_mod.ssm_seq(p["mix"], a, rmsnorm(p["ln1"], x), cfg,
+        h, cache = ssm_mod.ssm_seq(p["mix"], _select_state0(a, adapter_ids),
+                                   rmsnorm(p["ln1"], x), cfg,
                                    make_cache=make_cache)
         return x + h, cache, aux
     if kind == "rglru":
-        h, cache = rglru_mod.rglru_seq(p["mix"], a, rmsnorm(p["ln1"], x), cfg,
+        h, cache = rglru_mod.rglru_seq(p["mix"], _select_state0(a, adapter_ids),
+                                       rmsnorm(p["ln1"], x), cfg,
                                        make_cache=make_cache)
         x = x + h
         x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x))
@@ -181,7 +191,8 @@ def _apply_seq(kind: str, p: dict, a: dict, x, cfg: ModelConfig, *,
     h, cache = attn_mod.attention_seq(p["attn"], a, rmsnorm(p["ln1"], x), cfg,
                                       positions=positions, window=w,
                                       make_cache=make_cache,
-                                      cache_len=cache_len)
+                                      cache_len=cache_len,
+                                      adapter_ids=adapter_ids)
     x = x + h
     if kind == "moe":
         h2, aux = moe_apply(p["moe"], rmsnorm(p["ln2"], x), cfg)
@@ -191,7 +202,7 @@ def _apply_seq(kind: str, p: dict, a: dict, x, cfg: ModelConfig, *,
 
 
 def _apply_decode(kind: str, p: dict, a: dict, x, cache, cfg: ModelConfig, *,
-                  pos):
+                  pos, adapter_ids=None):
     if kind == "ssm":
         h, cache = ssm_mod.ssm_decode(p["mix"], a, rmsnorm(p["ln1"], x), cache,
                                       cfg)
@@ -203,7 +214,8 @@ def _apply_decode(kind: str, p: dict, a: dict, x, cache, cfg: ModelConfig, *,
         return x + mlp(p["mlp"], rmsnorm(p["ln2"], x)), cache
     w = attn_window(cfg, kind)
     h, cache = attn_mod.attention_decode(p["attn"], a, rmsnorm(p["ln1"], x),
-                                         cache, cfg, pos=pos, window=w)
+                                         cache, cfg, pos=pos, window=w,
+                                         adapter_ids=adapter_ids)
     x = x + h
     if kind == "moe":
         h2, _ = moe_apply(p["moe"], rmsnorm(p["ln2"], x), cfg)
@@ -218,8 +230,13 @@ def _apply_decode(kind: str, p: dict, a: dict, x, cache, cfg: ModelConfig, *,
 
 def stack_seq(params: dict, adapters: dict, x: jax.Array, cfg: ModelConfig, *,
               positions: jax.Array, make_cache: bool = False,
-              remat: bool = False, cache_len=None):
+              remat: bool = False, cache_len=None, adapter_ids=None):
     """Run all groups over a full sequence.
+
+    With ``adapter_ids`` (multi-tenant serving) adapter leaves carry an
+    ``n_slots`` dim after the scanned layer dim — ``(L, n_slots, ...)``,
+    the AdapterBank serving layout — so every layer slice hands the whole
+    slot stack to the batched multi-LoRA projections.
 
     Returns (x, caches | None, aux_sum)."""
     caches: dict = {}
@@ -236,7 +253,8 @@ def stack_seq(params: dict, adapters: dict, x: jax.Array, cfg: ModelConfig, *,
                 x, c, a_ = _apply_seq(k, lp[f"s{i}"], la.get(f"s{i}", {}), x,
                                       cfg, positions=positions,
                                       make_cache=make_cache,
-                                      cache_len=cache_len)
+                                      cache_len=cache_len,
+                                      adapter_ids=adapter_ids)
                 aux = aux + a_
                 if c is not None:
                     lcaches[f"s{i}"] = c
@@ -251,7 +269,8 @@ def stack_seq(params: dict, adapters: dict, x: jax.Array, cfg: ModelConfig, *,
 
 
 def stack_decode(params: dict, adapters: dict, x: jax.Array,
-                 caches: dict, cfg: ModelConfig, *, pos: jax.Array):
+                 caches: dict, cfg: ModelConfig, *, pos: jax.Array,
+                 adapter_ids=None):
     """Single-token step through all groups. Returns (x, new_caches)."""
     new_caches: dict = {}
     for name, kinds, n in groups_for(cfg):
@@ -264,7 +283,8 @@ def stack_decode(params: dict, adapters: dict, x: jax.Array,
             for i, k in enumerate(kinds):
                 key = f"s{i}"
                 x, c = _apply_decode(k, lp[key], la.get(key, {}), x,
-                                     lc[key], cfg, pos=pos)
+                                     lc[key], cfg, pos=pos,
+                                     adapter_ids=adapter_ids)
                 new_lc[key] = c
             return x, new_lc
 
