@@ -1,0 +1,131 @@
+"""Ragged continuous batching benchmark: mixed-length trace, ragged vs
+length-bucketed waves.
+
+Realistic edge traffic (paper §IV: many tenants, heterogeneous requests)
+never arrives length-aligned. The PR-1..3 engine bucketed waves by exact
+prompt length, so a trace with ``--n-lengths`` distinct lengths fragments
+into mostly-underfull waves, and every row in a wave decodes the wave's
+MAX budget (smaller budgets ride as padding). The ragged engine packs any
+mix of lengths/budgets into one wave (per-row cache positions), retires
+rows at their own budget, and re-prefills freed slots mid-wave.
+
+Emits ``name,us_per_call,derived`` rows:
+
+- ``ragged_bucketed_baseline`` — host re-implementation of the PR-3
+  length-bucketed wave packer driving ``generate_scan`` directly (equal
+  length per wave, wave gen = max budget in the wave).
+- ``ragged_engine``            — the ragged continuous-batching drain.
+
+Compile time is excluded (warmup drain per impl).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from collections import defaultdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.launch.engine import DecodeEngine
+from repro.models import model as M
+
+
+def _make_trace(n_requests, lengths, budgets, vocab, seed=0):
+    """Round-robin mixed-length/mixed-budget request trace."""
+    rng = np.random.default_rng(seed)
+    trace = []
+    for i in range(n_requests):
+        L = lengths[i % len(lengths)]
+        g = budgets[i % len(budgets)]
+        trace.append((rng.integers(0, vocab, L).astype(np.int32), int(g)))
+    return trace
+
+
+def _drain_bucketed(params, cfg, trace, slots):
+    """PR-3 engine behavior: equal-length waves, wave gen = max budget."""
+    buckets = defaultdict(list)
+    for toks, g in trace:
+        buckets[len(toks)].append((toks, g))
+    served = 0
+    for reqs in buckets.values():
+        for w0 in range(0, len(reqs), slots):
+            wave = reqs[w0:w0 + slots]
+            gen = max(g for _, g in wave)
+            prompts = np.stack([t for t, _ in wave])
+            if len(wave) < slots:              # pad: replicate a live row
+                prompts = np.concatenate(
+                    [prompts, np.repeat(prompts[-1:], slots - len(wave), 0)])
+            toks = M.generate_scan(params, cfg, jnp.asarray(prompts), gen=gen)
+            np.asarray(toks)                   # sync
+            served += sum(g for _, g in wave)
+    return served
+
+
+def _drain_ragged(params, cfg, trace, slots):
+    engine = DecodeEngine(cfg, slots=slots)
+    for toks, g in trace:
+        engine.submit(toks, g)
+    _, stats = engine.run(params)
+    return stats
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--no-reduced", dest="reduced", action="store_false",
+                    help="benchmark the full-size config (default: reduced)")
+    ap.set_defaults(reduced=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--n-lengths", type=int, default=6,
+                    help="distinct prompt lengths in the trace")
+    ap.add_argument("--repeat", type=int, default=3,
+                    help="timed drains per impl (best-of, noise control)")
+    # benchmarks/run.py imports main() with argv=None -> defaults
+    args = ap.parse_args([] if argv is None else argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced().with_(dtype="float32")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    lengths = [6 + 3 * i for i in range(args.n_lengths)]
+    budgets = [4, 16, 8, 2, 12, 6]
+    trace = _make_trace(args.requests, lengths, budgets, cfg.vocab_size)
+    ntok = sum(g for _, g in trace)
+
+    def best_of(fn):
+        fn()                                   # warmup: compile + first drain
+        times, res = [], None
+        for _ in range(max(args.repeat, 1)):
+            t0 = time.time()
+            res = fn()
+            times.append(time.time() - t0)
+        return min(times), res
+
+    dt_bucketed, _ = best_of(
+        lambda: _drain_bucketed(params, cfg, trace, args.slots))
+    dt_ragged, stats = best_of(
+        lambda: _drain_ragged(params, cfg, trace, args.slots))
+
+    emit("ragged_bucketed_baseline", dt_bucketed * 1e6,
+         f"tok_s={ntok / dt_bucketed:.1f};requests={args.requests};"
+         f"n_lengths={args.n_lengths}")
+    emit("ragged_engine", dt_ragged * 1e6,
+         f"tok_s={ntok / dt_ragged:.1f};util={stats.utilization:.2f};"
+         f"waves={stats.waves};segments={stats.segments}")
+    emit("ragged_vs_bucketed", 0,
+         f"speedup={dt_bucketed / dt_ragged:.2f}x")
+    return {"bucketed_s": dt_bucketed, "ragged_s": dt_ragged,
+            "speedup": dt_bucketed / dt_ragged,
+            "utilization": stats.utilization}
+
+
+if __name__ == "__main__":
+    import sys
+    out = main(sys.argv[1:])
+    print(f"# ragged vs length-bucketed: {out['speedup']:.2f}x "
+          f"(engine utilization {out['utilization']:.2f})")

@@ -86,12 +86,15 @@ def main(argv=None) -> dict:
             engine.serve(params, prompts[rows], gen=args.gen)
         return time.time() - t0
 
+    util = {}
+
     def drain_mixed_bank() -> float:
         """ONE drain: mixed-domain waves against the device-resident bank."""
         engine = DecodeEngine(cfg, slots=args.slots, bank=bank)
         t0 = time.time()
-        engine.serve(bank.serving_params(backbone), prompts, gen=args.gen,
-                     domains=demand)
+        _, stats = engine.serve(bank.serving_params(backbone), prompts,
+                                gen=args.gen, domains=demand)
+        util["serve_mixed_bank"] = stats.utilization
         return time.time() - t0
 
     results = {}
@@ -101,8 +104,9 @@ def main(argv=None) -> dict:
         fn()                                   # warmup: compile + first drain
         dt = fn()
         results[name] = dt
+        u = f";util={util[name]:.2f}" if name in util else ""
         emit(name, dt * 1e6, f"tok_s={ntok / dt:.1f};domains={args.domains};"
-             f"requests={args.requests}")
+             f"requests={args.requests}" + u)
     emit("serve_mixed_vs_per_domain", 0,
          f"speedup={results['serve_per_domain'] / results['serve_mixed_bank']:.2f}x;"
          f"frac_of_single="

@@ -4,9 +4,10 @@
 #   bash scripts/ci.sh
 #
 # Mirrors what the ROADMAP calls tier-1 (`python -m pytest -x -q`) and adds
-# a fast interpret-mode Pallas smoke (flash attention + flash decode +
-# trainable LoRA matmul fwd/bwd + batched multi-LoRA) so kernel regressions
-# surface even when the suite is filtered.
+# a fast interpret-mode Pallas smoke (flash attention + flash decode — incl.
+# the ragged per-row-position serving layout + multi-LoRA adapter_ids —
+# + trainable LoRA matmul fwd/bwd) so kernel regressions surface even when
+# the suite is filtered.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -36,6 +37,20 @@ np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
 
 want = ref.decode_attention(q[:, -1], k, v, q_pos=S - 1, kv_pos=kp)
 got = ops.flash_decode(q[:, -1], k, v, q_pos=S - 1, kv_pos=kp,
+                       backend="interpret")
+np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+# ragged mixed-length serving layout: per-row q positions against a cache
+# whose rows are written to DIFFERENT depths (+1e9 sentinel beyond each
+# row's length) — the engine's continuous-batching decode shape
+q2, k2, v2 = (jnp.tile(t, (2,) + (1,) * (t.ndim - 1))
+              for t in (q[:, -1], k, v))                # 2-row wave
+written = jnp.asarray([10, 18])                         # per-row cache fill
+kp_rag = jnp.where(jnp.arange(T)[None, :] < written[:, None],
+                   jnp.arange(T)[None, :], 10 ** 9)     # (2, T)
+qp_rag = written - 1                                    # (2,)
+want = ref.decode_attention(q2, k2, v2, q_pos=qp_rag, kv_pos=kp_rag)
+got = ops.flash_decode(q2, k2, v2, q_pos=qp_rag, kv_pos=kp_rag,
                        backend="interpret")
 np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
 
@@ -76,5 +91,6 @@ got = ops.lora_bgmv(xs, w, a_s, b_s, ids[:4], 2.0, backend="interpret")
 np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                            atol=1e-3, rtol=1e-3)
 print("[ci] interpret-mode kernel smoke OK "
-      "(attn + decode + lora fwd/bwd + multi-lora gathered fwd)")
+      "(attn + decode + ragged per-row decode + lora fwd/bwd "
+      "+ multi-lora gathered fwd)")
 PY

@@ -58,10 +58,14 @@ class RoundCost:
 
     ``tokens`` counts decode tokens served during the round (0 for
     fine-tuning rounds); with ``latency_s`` it yields the measured serving
-    throughput (:attr:`tok_per_s`). ``examples`` mirrors it for the
-    fine-tuning service: training examples consumed during the round (0 for
-    serving rounds), yielding the measured fine-tuning throughput
-    (:attr:`ex_per_s`)."""
+    throughput (:attr:`tok_per_s`). ``padded_tokens`` counts decode
+    slot-steps the round EXECUTED but did not serve (retired or empty
+    batch slots riding along in a wave) — :attr:`utilization` is then the
+    real accelerator efficiency, which is what compute/energy should be
+    priced on, not the served-token rate. ``examples`` mirrors ``tokens``
+    for the fine-tuning service: training examples consumed during the
+    round (0 for serving rounds), yielding the measured fine-tuning
+    throughput (:attr:`ex_per_s`)."""
     latency_s: float
     compute_flops: float
     energy_j: float
@@ -69,6 +73,7 @@ class RoundCost:
     memory_bytes: int
     tokens: int = 0
     examples: int = 0
+    padded_tokens: int = 0
 
     @property
     def tok_per_s(self) -> float:
@@ -78,6 +83,12 @@ class RoundCost:
     def ex_per_s(self) -> float:
         return self.examples / self.latency_s if self.latency_s > 0 else 0.0
 
+    @property
+    def utilization(self) -> float:
+        """Served fraction of executed decode slot-steps (1.0 = no waste)."""
+        total = self.tokens + self.padded_tokens
+        return self.tokens / total if total else 1.0
+
     def __add__(self, o: "RoundCost") -> "RoundCost":
         return RoundCost(self.latency_s + o.latency_s,
                          self.compute_flops + o.compute_flops,
@@ -85,7 +96,8 @@ class RoundCost:
                          self.comm_bytes + o.comm_bytes,
                          max(self.memory_bytes, o.memory_bytes),
                          self.tokens + o.tokens,
-                         self.examples + o.examples)
+                         self.examples + o.examples,
+                         self.padded_tokens + o.padded_tokens)
 
 
 def sl_round_cost(trace: SLTrace, cm: CostModel, *,

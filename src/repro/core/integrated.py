@@ -208,7 +208,10 @@ class IntegratedRuntime:
         number of domains. Profit is booked from each row's own domain
         head via the same multi-tenant classify path. The RoundCost ledger
         records the engine's measured serving latency and token count, so
-        ``cost.tok_per_s`` is the round's decode throughput.
+        ``cost.tok_per_s`` is the round's decode throughput; compute FLOPs
+        are booked on EXECUTED decode steps (served + padded slot-steps),
+        and ``cost.utilization`` exposes how much of that execution served
+        real tokens under the engine's ragged continuous batching.
         """
         domains = [domain] if isinstance(domain, str) else list(domain)
         base, rem = divmod(self.serve_batch, len(domains))
@@ -246,9 +249,11 @@ class IntegratedRuntime:
         # forward); stats.wall_s is the pure decode-serving share
         nbytes = self.serve_batch * (self.cfg.peft.head_dim_out * 4
                                      + self.serve_gen * 4)
-        flops = 2.0 * self.cfg.active_param_count() * stats.tokens
+        executed = stats.tokens + stats.padded_tokens
+        flops = 2.0 * self.cfg.active_param_count() * executed
         cost = RoundCost(time.time() - t0, flops, self.cm.d2d.energy(nbytes),
-                         nbytes, 0, tokens=stats.tokens)
+                         nbytes, 0, tokens=stats.tokens,
+                         padded_tokens=stats.padded_tokens)
         return self.profit_scale * acc, cost
 
     # -- scheduling ----------------------------------------------------------

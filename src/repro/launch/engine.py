@@ -1,45 +1,57 @@
-"""Batched decode-serving engine (continuous-batching-style, wave-scheduled).
+"""Ragged continuous-batching decode engine.
 
 The integrated runtime's "task inference" rounds (paper §IV) are throughput
-bound: a round's profit is booked per served request, so requests must be
-packed onto the accelerator, not dispatched one by one. This engine is the
-serving layer between a request queue and the fused single-dispatch
-generator (:func:`repro.models.model.generate_scan`):
+bound: a round's profit is booked per served request, so requests must keep
+the accelerator full under realistic edge traffic — heterogeneous prompt
+lengths and token budgets from many tenants — not just equal-shaped waves.
+This engine is the serving layer between a request queue and the fused
+ragged-wave primitives in :mod:`repro.models.model`.
 
-- **Request queue**: ``submit()`` enqueues prompts with per-request
-  ``max_new_tokens``; ``run()`` drains the queue.
-- **Fixed batch slots**: requests are packed into a fixed number of slots
-  (``slots``) so every wave reuses the same compiled generate computation.
-  Partial waves are padded by replicating a live row; padded rows are
-  dropped on output.
-- **Per-slot position/length tracking**: each :class:`Slot` records the
-  request id, prompt length, and token budget; a wave groups
-  requests of equal prompt length (length-bucketed packing) so all slots in
-  a wave share cache positions and the whole wave is ONE jitted call —
-  prefill + scanned decode, flash-decode attention per step.
-- **Slot recycling**: when a slot's request completes its token budget the
-  slot is freed and refilled from the queue for the next wave.
+**Ragged wave lifecycle** (one ``run()`` drain):
 
-Throughput (tok/s), wave count, and wall latency are returned as
-:class:`EngineStats`; ``core/integrated.py::produce`` feeds them into the
-``RoundCost`` ledger.
+1. **Pack** — free slots are filled from the queue FIFO, with NO length
+   bucketing: one wave freely mixes prompt lengths, token budgets, and
+   (against an AdapterBank) tenant domains. Prompts are right-padded to
+   the pack's max length (bucketed to the next power of two so the jit
+   cache stays O(log max_len)).
+2. **Prefill** — one jitted dispatch builds every packed row's decode
+   state with per-row cache positions (``model._wave_prefill_fn``). The
+   cache capacity is sized once per drain to the largest
+   ``prompt + budget`` in the queue.
+3. **Decode segments** — generation runs as a sequence of jitted
+   ``lax.scan`` segments (``model._segment_fn``). Each segment's length is
+   the power-of-two floor of the smallest remaining budget among live
+   rows, so segments are never longer than the next retirement and the
+   set of compiled segment shapes is {1, 2, 4, ...} — the jit cache stops
+   growing no matter how budgets mix.
+4. **Retire + refill IN-WAVE** — a row that exhausts its budget retires
+   inside the scan (per-row active mask: cache writes dropped, position
+   frozen). At the next segment boundary the freed slot is re-prefilled
+   from the queue (``model._refill_fn`` merges fresh cache rows into the
+   live wave state) — true continuous batching: the wave never drains to
+   a boundary just to admit new work.
+5. **Account** — ``EngineStats.tokens`` counts served (budget) tokens;
+   ``EngineStats.padded_tokens`` counts wasted slot-steps (retired or
+   empty slots riding along in a segment), so ``utilization`` is the real
+   accelerator efficiency, not just the served-token rate.
+
+Every drain is token-for-token identical to serving each request alone:
+per-row cache positions + sentinel masking keep rows independent in
+attention, and the recurrent families freeze padded state
+identity-exactly (see ``stack_seq(lengths=...)``).
 
 Modality-conditioned requests (vision/audio extras) carry their extras row
-with the request (``submit(..., extras={...})``): waves stack the rows in
-slot order, so each request stays bound to its own conditioning even when
-length-bucketing reorders the queue. Every request in one drain must agree
-on the extras keys (or carry none).
+with the request (``submit(..., extras={...})``); refills rebuild the wave
+extras so each slot stays bound to its own conditioning. Every request in
+one drain must agree on the extras keys (or carry none).
 
 **Multi-tenant serving**: constructed with an
 :class:`~repro.core.adapter_bank.AdapterBank`, requests gain a ``domain``
-field (``submit(..., domain=...)``) and one wave freely mixes requests
-from different domains — each row's slot id is resolved against the bank
-and threaded to the batched multi-LoRA kernels as per-row ``adapter_ids``.
-Length-bucketing no longer implies domain-bucketing, and the bank's
-stacked adapters are re-read at every wave, so an
-``AdapterBank.publish`` between waves is served by the very next wave
-(no stale reads). Mixed-domain waves are token-for-token identical to
-draining each domain alone with its merged params.
+field and one wave freely mixes domains — each row's bank slot id rides
+the wave as per-row ``adapter_ids`` into the batched multi-LoRA kernels.
+``bank.stacked`` is re-read at every prefill/refill/segment dispatch, so
+an ``AdapterBank.publish`` between drains (or between segments) is served
+by the very next dispatch.
 """
 from __future__ import annotations
 
@@ -53,6 +65,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _pow2floor(n: int) -> int:
+    return 1 << (int(n).bit_length() - 1)
 
 
 @dataclasses.dataclass
@@ -86,24 +106,33 @@ class Slot:
 class Completion:
     uid: int
     tokens: np.ndarray                 # (max_new_tokens,) generated tokens
-    latency_s: float                   # wall time of the serving wave
-    wave: int
+    latency_s: float                   # drain-start -> retirement wall time
+    wave: int                          # prefill wave that admitted the row
 
 
 @dataclasses.dataclass
 class EngineStats:
     requests: int = 0
-    waves: int = 0
-    tokens: int = 0                    # served (non-padding) tokens
+    waves: int = 0                     # prefill/refill dispatches
+    segments: int = 0                  # jitted decode-scan dispatches
+    tokens: int = 0                    # served (budgeted) tokens
+    padded_tokens: int = 0             # wasted slot-steps (retired/empty rows)
     wall_s: float = 0.0
 
     @property
     def tok_per_s(self) -> float:
         return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
 
+    @property
+    def utilization(self) -> float:
+        """Served fraction of executed decode slot-steps (1.0 = no waste;
+        same convention as RoundCost.utilization)."""
+        total = self.tokens + self.padded_tokens
+        return self.tokens / total if total else 1.0
+
 
 class DecodeEngine:
-    """Packs queued requests into fixed slots and serves them in waves."""
+    """Packs queued requests into fixed slots and serves them ragged."""
 
     def __init__(self, cfg, *, slots: int = 8, greedy: bool = True,
                  seed: int = 0, bank=None):
@@ -131,11 +160,10 @@ class DecodeEngine:
                                  "constructed with an AdapterBank")
             self.bank.slot(domain)             # fail fast on unknown domains
         # enforce the all-or-none tenancy invariant at the door (rejecting
-        # the offending request, not poisoning the queue): length bucketing
-        # could otherwise separate tenant-addressed and merged-param
-        # requests into different waves, where the mix would surface as a
-        # shape error deep inside the projection kernels (stacked adapter
-        # leaves served without adapter_ids).
+        # the offending request, not poisoning the queue): a mixed drain
+        # would otherwise surface as a shape error deep inside the
+        # projection kernels (stacked adapter leaves served without
+        # adapter_ids).
         if self._queue and (domain is None) != (self._queue[0].domain is None):
             raise ValueError("all requests in a drain must carry a domain "
                              "or none (mixing tenant-addressed and "
@@ -149,95 +177,185 @@ class DecodeEngine:
     def pending(self) -> int:
         return len(self._queue)
 
-    # -- serving ------------------------------------------------------------
-    def _pack_wave(self) -> list[Request]:
-        """Fill free slots with queued requests of one prompt-length bucket
-        (equal length => shared cache positions => one fused dispatch)."""
-        S = len(self._queue[0].tokens)
-        wave: list[Request] = []
-        deferred: deque[Request] = deque()
-        free = [s for s in self.slot_table if not s.active]
-        while self._queue and len(wave) < len(free):
+    # -- packing ------------------------------------------------------------
+    def _fill_slots(self) -> list[tuple[int, Request]]:
+        """Assign queued requests to free slots FIFO (no length bucketing).
+        Returns [(slot_index, request)] for the rows to (re-)prefill."""
+        packed: list[tuple[int, Request]] = []
+        for i, slot in enumerate(self.slot_table):
+            if slot.active or not self._queue:
+                continue
             req = self._queue.popleft()
-            if len(req.tokens) == S:
-                wave.append(req)
-                free[len(wave) - 1].assign(req)
-            else:
-                deferred.append(req)               # next bucket, keep order
-        self._queue.extendleft(reversed(deferred))
-        return wave
+            slot.assign(req)
+            packed.append((i, req))
+        return packed
 
-    def _wave_extras(self, wave: list[Request]) -> Optional[dict]:
-        """Stack per-request extras rows in slot order (padding replicates
-        the last live row, mirroring the prompt padding)."""
-        if all(r.extras is None for r in wave):
-            return None
-        keys = {k for r in wave if r.extras for k in r.extras}
-        if any(r.extras is None or set(r.extras) != keys for r in wave):
+    def _check_extras(self) -> frozenset:
+        """Validate the all-or-none extras-keys invariant across the drain."""
+        keys = {k for r in self._queue if r.extras for k in r.extras}
+        if keys and any(r.extras is None or set(r.extras) != keys
+                        for r in self._queue):
             raise ValueError("all requests in a drain must carry the same "
                              f"extras keys ({sorted(keys)}) or none")
-        pad = self.slots - len(wave)
-        return {k: jnp.asarray(np.stack([np.asarray(r.extras[k])
-                                         for r in wave]
-                                        + [np.asarray(wave[-1].extras[k])] * pad))
-                for k in keys}
+        return frozenset(keys)
 
-    def _wave_adapter_ids(self, wave: list[Request]):
-        """Per-slot bank slot ids (padding replicates the last live row's
-        id, mirroring the prompt padding). None for single-tenant waves."""
-        if all(r.domain is None for r in wave):
-            return None
-        doms = [r.domain for r in wave]
-        doms += [doms[-1]] * (self.slots - len(wave))
-        return self.bank.adapter_ids(doms)
+    def _wave_params(self, params, tenant: bool):
+        """Per-dispatch params: re-read the bank so publishes are fresh."""
+        return params if not tenant else \
+            {**params, "adapters": self.bank.stacked}
 
+    # -- serving ------------------------------------------------------------
     def run(self, params) -> tuple[list[Completion], EngineStats]:
-        """Drain the queue: pack -> one generate_scan dispatch per wave ->
-        recycle completed slots. Returns (completions, stats).
+        """Drain the queue as ONE ragged continuous-batching wave.
 
-        Multi-tenant drains (domain-carrying requests against a bank)
-        re-read ``bank.stacked`` per wave, so a publish() between waves is
-        served immediately."""
+        Returns (completions, stats). See the module docstring for the
+        wave lifecycle; the drain is token-for-token identical to serving
+        every request alone."""
         stats = EngineStats()
         out: list[Completion] = []
+        if not self._queue:
+            return out, stats
         t_all = time.time()
-        while self._queue:
-            wave = self._pack_wave()
-            gen = max(r.max_new_tokens for r in wave)
-            prompts = np.stack([r.tokens for r in wave])
-            if len(wave) < self.slots:             # pad: replicate a live row
-                fill = np.repeat(prompts[-1:], self.slots - len(wave), axis=0)
-                prompts = np.concatenate([prompts, fill], axis=0)
+        extras_keys = self._check_extras()
+        tenant = self._queue[0].domain is not None
+        # cache capacity: one size per drain keeps every refill shape-stable
+        cap = _pow2ceil(max(len(r.tokens) + r.max_new_tokens
+                            for r in self._queue))
+        B = self.slots
+        slot_req: list[Optional[Request]] = [None] * B
+        slot_wave = [0] * B
+        bufs: list[list[np.ndarray]] = [[] for _ in range(B)]
+        remaining = np.zeros(B, np.int64)
+        tok = caches = pos = None
+        ids = None                         # device (B,) adapter slot ids
+        cur_extras: list[Optional[dict]] = [None] * B
+        cur_dom: list[Optional[str]] = [None] * B
+
+        while self._queue or remaining.any():
+            packed = self._fill_slots()
+            if packed:
+                stats.waves += 1
+                for i, req in packed:
+                    slot_req[i], slot_wave[i] = req, stats.waves - 1
+                    remaining[i] = req.max_new_tokens
+                    cur_extras[i], cur_dom[i] = req.extras, req.domain
+                live = [i for i in range(B) if slot_req[i] is not None]
+                if tenant:                     # full-wave ids for segments
+                    doms = [cur_dom[i] if cur_dom[i] is not None
+                            else cur_dom[live[0]] for i in range(B)]
+                    ids = self.bank.adapter_ids(doms)
+                wp = self._wave_params(params, tenant)
+                # right-pad the PACKED prompts to a pow2 width (jit-shape
+                # bucketing both dims keeps the compile cache O(log² cap))
+                S_pad = _pow2ceil(max(len(req.tokens) for _, req in packed))
+                if caches is None:
+                    # initial wave prefill: all B slots (empty slots carry
+                    # 1-token dummies and retire immediately)
+                    prompts = np.zeros((B, S_pad), np.int32)
+                    lens = np.ones(B, np.int32)
+                    for i, req in packed:
+                        prompts[i, :len(req.tokens)] = req.tokens
+                        lens[i] = len(req.tokens)
+                    batch = {"tokens": jnp.asarray(prompts),
+                             **self._stack_extras(
+                                 [cur_extras[i] for i in range(B)],
+                                 extras_keys, live)}
+                    tok, caches, pos = M._wave_prefill_fn(self.cfg, cap)(
+                        wp, batch, jnp.asarray(lens), ids)
+                else:
+                    # in-wave refill: prefill ONLY the admitted rows
+                    # (pow2-padded row count) and scatter them into the
+                    # live wave state at their slot indices
+                    Br = min(_pow2ceil(len(packed)), _pow2ceil(B))
+                    prompts = np.zeros((Br, S_pad), np.int32)
+                    lens = np.ones(Br, np.int32)
+                    row_idx = np.full(Br, B, np.int32)   # pad rows: dropped
+                    for r, (i, req) in enumerate(packed):
+                        prompts[r, :len(req.tokens)] = req.tokens
+                        lens[r] = len(req.tokens)
+                        row_idx[r] = i
+                    rex = [cur_extras[i] for i, _ in packed]
+                    rex += [rex[0]] * (Br - len(packed))
+                    batch = {"tokens": jnp.asarray(prompts),
+                             **self._stack_extras(rex, extras_keys, [0])}
+                    ids_rows = None
+                    if tenant:
+                        rdom = [req.domain for _, req in packed]
+                        rdom += [rdom[0]] * (Br - len(packed))
+                        ids_rows = self.bank.adapter_ids(rdom)
+                    tok, caches, pos = M._refill_fn(self.cfg, cap)(
+                        wp, batch, jnp.asarray(lens), jnp.asarray(row_idx),
+                        tok, caches, pos, ids_rows)
+            # zero-budget admissions complete immediately with empty tokens
+            # (they never enter a segment, so the retirement loop below
+            # would otherwise leak their slot)
+            for i in range(B):
+                if slot_req[i] is not None and remaining[i] == 0:
+                    req = slot_req[i]
+                    out.append(Completion(req.uid, np.zeros(0, np.int32),
+                                          time.time() - t_all, slot_wave[i]))
+                    stats.requests += 1
+                    slot_req[i] = None
+                    self.slot_table[i].recycle()
+            if not remaining.any():
+                continue                       # re-pack freed slots (or exit)
+            # segment length: with queued work, the pow2 floor of the
+            # smallest live budget — never longer than the next retirement,
+            # so refills happen in-wave. With an empty queue there is
+            # nothing to admit at a retirement, so run the longest pow2
+            # segment that cannot overshoot the wave (per-row retirement
+            # inside the scan idles finished rows either way; fewer
+            # dispatches, identical padded_tokens).
+            live_rem = remaining[remaining > 0]
+            seg = _pow2floor(int(live_rem.min() if self._queue
+                                 else live_rem.max()))
             key = None
             if not self.greedy:
                 self._key, key = jax.random.split(self._key)
-            ids = self._wave_adapter_ids(wave)
-            wave_params = params if ids is None else \
-                {**params, "adapters": self.bank.stacked}
-            t0 = time.time()
-            toks = M.generate_scan(wave_params, self.cfg,
-                                   jnp.asarray(prompts), gen=gen,
-                                   extra_batch=self._wave_extras(wave),
-                                   greedy=self.greedy, key=key,
-                                   adapter_ids=ids)
-            toks = np.asarray(toks)                # device sync = wave done
-            dt = time.time() - t0
-            for i, req in enumerate(wave):
-                slot = next(s for s in self.slot_table if s.uid == req.uid)
-                out.append(Completion(req.uid, toks[i, :req.max_new_tokens],
-                                      dt, stats.waves))
-                stats.tokens += req.max_new_tokens
-                slot.recycle()
-            stats.waves += 1
-            stats.requests += len(wave)
+            toks, tok, caches, pos, _, key = M._segment_fn(
+                self.cfg, seg, self.greedy)(
+                self._wave_params(params, tenant), tok, caches, pos,
+                jnp.asarray(remaining, jnp.int32), key, ids)
+            toks = np.asarray(toks)            # device sync = segment done
+            if key is not None:
+                self._key = key                # carried per-step splits
+            stats.segments += 1
+            served_now = 0
+            for i in range(B):
+                if remaining[i] <= 0:
+                    continue
+                served = min(seg, int(remaining[i]))
+                bufs[i].append(toks[i, :served])
+                remaining[i] -= served
+                served_now += served
+                if remaining[i] == 0:          # retire: complete + free slot
+                    req = slot_req[i]
+                    out.append(Completion(
+                        req.uid, np.concatenate(bufs[i]),
+                        time.time() - t_all, slot_wave[i]))
+                    stats.requests += 1
+                    bufs[i] = []
+                    slot_req[i] = None
+                    self.slot_table[i].recycle()
+            stats.tokens += served_now
+            stats.padded_tokens += seg * B - served_now
         stats.wall_s = time.time() - t_all
         return out, stats
+
+    def _stack_extras(self, cur_extras, keys: frozenset, live) -> dict:
+        """Stack each slot's extras row (empty slots replicate a live row)."""
+        if not keys:
+            return {}
+        fallback = cur_extras[live[0]]
+        rows = [e if e is not None else fallback for e in cur_extras]
+        return {k: jnp.asarray(np.stack([np.asarray(r[k]) for r in rows]))
+                for k in keys}
 
     def serve(self, params, prompts, *, gen: int,
               extra_batch: Optional[dict] = None,
               domains: Optional[list] = None
               ) -> tuple[np.ndarray, EngineStats]:
-        """Serve an (N, S) prompt batch in slot-sized waves.
+        """Serve an (N, S) prompt batch in one continuous-batching drain.
 
         One engine call per round: submits every row (with its
         ``extra_batch`` row, leading dim N, if given, and its ``domains[i]``

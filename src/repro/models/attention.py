@@ -121,8 +121,19 @@ def attention_seq(params: dict, adapters: Optional[dict], x: jax.Array,
                   use_rope: bool = True,
                   make_cache: bool = False,
                   cache_len: Optional[int] = None,
-                  adapter_ids: Optional[jax.Array] = None):
-    """Returns (out (B,S,d_model), cache or None)."""
+                  adapter_ids: Optional[jax.Array] = None,
+                  lengths: Optional[jax.Array] = None):
+    """Returns (out (B,S,d_model), cache or None).
+
+    ``lengths`` (B,) marks ragged right-padded rows: row b's valid tokens
+    occupy columns ``[0, lengths[b])``. Because padding sits on the RIGHT
+    and masking is causal, valid rows never see padded columns, so the
+    full-sequence output for valid tokens is exact without per-row q
+    positions. Raggedness only matters for the cache: padded columns'
+    K/V land in the buffer, so the per-row cache ``pos`` leaf (B, L)
+    carries the ``+1e9`` sentinel beyond each row's length — decode-side
+    length-aware masking then keeps them invisible forever.
+    """
     B, S = x.shape[:2]
     q, k, v = _qkv(params, adapters, x, cfg, kv_x, adapter_ids)
     kv_positions = positions if kv_positions is None else kv_positions
@@ -149,26 +160,39 @@ def attention_seq(params: dict, adapters: Optional[dict], x: jax.Array,
 
     cache = None
     if make_cache:
+        lens = jnp.full((B,), S, jnp.int32) if lengths is None \
+            else lengths.astype(jnp.int32)
         if window and window > 0:                          # rolling buffer, W slots
             W = window
-            keep = min(S, W)
-            ps = jnp.arange(S - keep, S, dtype=jnp.int32)  # kept absolute positions
-            cache_k = jnp.zeros((B, W, *k.shape[2:]), k.dtype)
-            cache_k = cache_k.at[:, ps % W].set(k[:, -keep:])
-            cache_v = jnp.zeros((B, W, *v.shape[2:]), v.dtype)
-            cache_v = cache_v.at[:, ps % W].set(v[:, -keep:])
+            # slot s holds the largest position p ≡ s (mod W) with
+            # p <= len_b - 1 (the per-row rolling-buffer layout decode's
+            # ``pos % W`` writes continue); p < 0 means the slot is empty.
+            s_idx = jnp.arange(W, dtype=jnp.int32)
+            p = s_idx[None, :] + W * ((lens[:, None] - 1 - s_idx[None, :])
+                                      // W)                # (B, W)
+            valid = p >= 0
+            gidx = jnp.clip(p, 0, S - 1)[:, :, None, None]
+            cache_k = jnp.where(valid[:, :, None, None],
+                                jnp.take_along_axis(k, gidx, axis=1),
+                                jnp.zeros((), k.dtype))
+            cache_v = jnp.where(valid[:, :, None, None],
+                                jnp.take_along_axis(v, gidx, axis=1),
+                                jnp.zeros((), v.dtype))
             # +1e9 sentinel: empty slots must be *invisible* (negative would
             # mark them as always-visible prefix slots in the mask rules)
-            cpos = jnp.full((W,), 10 ** 9, jnp.int32).at[ps % W].set(ps)
+            cpos = jnp.where(valid, p, 10 ** 9)
             cache = {"k": cache_k, "v": cache_v, "pos": cpos}
         else:
             L = max(cache_len or S, S)
             pad = L - S
+            base = jnp.pad(positions.astype(jnp.int32), (0, pad),
+                           constant_values=10 ** 9)        # (L,)
+            cpos = jnp.where(jnp.arange(L)[None, :] < lens[:, None],
+                             base[None, :], 10 ** 9)       # (B, L)
             cache = {
                 "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
                 "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
-                "pos": jnp.pad(positions.astype(jnp.int32), (0, pad),
-                               constant_values=10 ** 9),
+                "pos": cpos,
             }
     return y, cache
 
@@ -181,14 +205,23 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
                      cache: dict, cfg: ModelConfig, *, pos: jax.Array,
                      window: int = 0, cross: bool = False,
                      use_rope: bool = True,
-                     adapter_ids: Optional[jax.Array] = None):
+                     adapter_ids: Optional[jax.Array] = None,
+                     active: Optional[jax.Array] = None):
     """x: (B, 1, d). cache: {'k','v','pos'} (+ static for cross). Returns
     (out, new_cache). ``adapter_ids`` selects each row's adapter from
-    stacked (n_slots, ...) adapter leaves (multi-tenant serving)."""
+    stacked (n_slots, ...) adapter leaves (multi-tenant serving).
+
+    ``pos`` is a scalar or per-row (B,) position: each row writes its own
+    cache slot ``pos[b]`` (``pos[b] % window`` for sliding), so one wave
+    mixes rows at different sequence positions (ragged continuous
+    batching). ``active`` (B,) bool retires rows in place: an inactive
+    row's cache write is routed out of bounds and dropped, freezing its
+    cache while the wave keeps decoding other rows."""
     B = x.shape[0]
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     lora = (adapters or {}).get("lora", {})
     lscale = cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
 
     q = _proj(x, params["wq"], params.get("bq"), lora.get("q"), lscale,
               adapter_ids)
@@ -200,23 +233,25 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
         new_cache = cache
     else:
         if use_rope:
-            q = rope(q, pos[None].astype(jnp.int32)[None], cfg.rope_theta)
+            q = rope(q, pos[:, None], cfg.rope_theta)
         k1 = _proj(x, params["wk"], params.get("bk"), lora.get("k"), lscale,
                    adapter_ids)
         v1 = _proj(x, params["wv"], params.get("bv"), lora.get("v"), lscale,
                    adapter_ids)
         k1 = k1.reshape(B, 1, nkv, hd)
         if use_rope:
-            k1 = rope(k1, pos[None].astype(jnp.int32)[None], cfg.rope_theta)
+            k1 = rope(k1, pos[:, None], cfg.rope_theta)
         v1 = v1.reshape(B, 1, nkv, hd)
-        slot = (pos % window).astype(jnp.int32) if window and window > 0 \
-            else pos.astype(jnp.int32)
-        k = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
-                                         (0, slot, 0, 0))
-        v = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
-                                         (0, slot, 0, 0))
-        kv_pos = jax.lax.dynamic_update_slice(
-            cache["pos"], pos.astype(jnp.int32)[None], (slot,))
+        T = cache["k"].shape[1]
+        slot = (pos % window) if window and window > 0 else pos
+        if active is not None:           # retired rows: write out of bounds
+            slot = jnp.where(active, slot, T)
+        rows = jnp.arange(B)
+        k = cache["k"].at[rows, slot].set(
+            k1[:, 0].astype(cache["k"].dtype), mode="drop")
+        v = cache["v"].at[rows, slot].set(
+            v1[:, 0].astype(cache["v"].dtype), mode="drop")
+        kv_pos = cache["pos"].at[rows, slot].set(pos, mode="drop")
         new_cache = {"k": k, "v": v, "pos": kv_pos}
 
     k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
@@ -247,10 +282,14 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
 
 def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, *,
                window: int = 0, layers: Optional[int] = None) -> dict:
-    """ParamSpec tree for a (stacked-over-layers) KV cache."""
+    """ParamSpec tree for a (stacked-over-layers) KV cache.
+
+    The sliding-window cache is a rolling buffer of exactly ``window``
+    slots — what the prefill path actually builds — regardless of how
+    ``seq_len`` compares to the window. ``pos`` is per-row (B, S): each
+    batch row tracks its own written slots (ragged serving)."""
     L = layers if layers is not None else cfg.n_layers
     nkv, hd = cfg.n_kv_heads, cfg.head_dim_
-    S = min(window, seq_len) if window and window > 0 else seq_len
     S = window if window and window > 0 else seq_len
     dt = jnp.dtype(cfg.dtype)
     return {
@@ -260,5 +299,6 @@ def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, *,
         "v": ParamSpec((L, batch, S, nkv, hd), dt,
                        (None, "batch", "kv_seq", "kv_heads", "head_dim"),
                        init="zeros"),
-        "pos": ParamSpec((L, S), jnp.int32, (None, "kv_seq"), init="zeros"),
+        "pos": ParamSpec((L, batch, S), jnp.int32, (None, "batch", "kv_seq"),
+                         init="zeros"),
     }

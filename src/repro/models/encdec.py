@@ -86,8 +86,12 @@ def _dec_positions(S: int):
 def decode_seq(params: dict, adapters: dict, tok_emb: jax.Array,
                enc_out: jax.Array, cfg: ModelConfig, *,
                make_cache: bool = False, remat: bool = False,
-               cache_len=None):
-    """Teacher-forced decoder pass. tok_emb: (B, S, d). Returns (x, caches)."""
+               cache_len=None, lengths=None):
+    """Teacher-forced decoder pass. tok_emb: (B, S, d). Returns (x, caches).
+
+    ``lengths`` (B,) marks ragged right-padded decoder prompts: the self
+    cache gets per-row sentinel positions beyond each row's length (the
+    cross cache is static per request and unaffected)."""
     B, S, _ = tok_emb.shape
     F = enc_out.shape[1]
     x = tok_emb + params["dec_pos"][:S][None].astype(tok_emb.dtype)
@@ -99,7 +103,7 @@ def decode_seq(params: dict, adapters: dict, tok_emb: jax.Array,
         h, self_cache = attn_mod.attention_seq(
             lp["self"], la, layernorm(lp["ln1"], x), cfg, positions=pos,
             causal=True, use_rope=False, make_cache=make_cache,
-            cache_len=cache_len)
+            cache_len=cache_len, lengths=lengths)
         x = x + h
         h, _ = attn_mod.attention_seq(
             lp["cross"], None, layernorm(lp["ln2"], x), cfg, positions=pos,
@@ -109,10 +113,14 @@ def decode_seq(params: dict, adapters: dict, tok_emb: jax.Array,
         cache = None
         if make_cache:
             # cross-attention KV is static per request: cache it per layer
+            # (pos is replicated per row so every cache leaf is
+            # batch-addressable — the engine's in-wave refill merges caches
+            # row-wise)
             from repro.models.attention import _qkv
             _, ck, cv = _qkv(lp["cross"], None, enc_out, cfg, enc_out)
             cache = {"self": self_cache,
-                     "cross": {"k": ck, "v": cv, "pos": enc_pos}}
+                     "cross": {"k": ck, "v": cv,
+                               "pos": jnp.broadcast_to(enc_pos, (B, F))}}
         return x, cache
 
     if remat:
@@ -122,17 +130,19 @@ def decode_seq(params: dict, adapters: dict, tok_emb: jax.Array,
 
 
 def decode_step(params: dict, adapters: dict, tok_emb: jax.Array,
-                caches: dict, cfg: ModelConfig, *, pos: jax.Array):
-    """One decoder token. tok_emb: (B, 1, d)."""
-    d = cfg.d_model
-    x = tok_emb + jax.lax.dynamic_slice(
-        params["dec_pos"], (pos.astype(jnp.int32), 0), (1, d))[None].astype(tok_emb.dtype)
+                caches: dict, cfg: ModelConfig, *, pos: jax.Array,
+                active=None):
+    """One decoder token. tok_emb: (B, 1, d). ``pos`` scalar or (B,)."""
+    B = tok_emb.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = tok_emb + jnp.take(params["dec_pos"], pos,
+                           axis=0)[:, None].astype(tok_emb.dtype)
 
     def body(x, layer):
         lp, la, lc = layer
         h, self_cache = attn_mod.attention_decode(
             lp["self"], la, layernorm(lp["ln1"], x), lc["self"], cfg, pos=pos,
-            use_rope=False)
+            use_rope=False, active=active)
         x = x + h
         h, _ = attn_mod.attention_decode(
             lp["cross"], None, layernorm(lp["ln2"], x), lc["cross"], cfg,
@@ -160,6 +170,7 @@ def encdec_cache_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
                            jnp.dtype(cfg.dtype),
                            (None, "batch", "frames", "kv_heads", "head_dim"),
                            init="zeros"),
-            "pos": ParamSpec((L, F), jnp.int32, (None, "frames"), init="zeros"),
+            "pos": ParamSpec((L, batch, F), jnp.int32,
+                             (None, "batch", "frames"), init="zeros"),
         },
     }

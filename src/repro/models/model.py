@@ -200,10 +200,18 @@ def classify_loss(params: dict, batch: dict, cfg: ModelConfig) -> tuple[jax.Arra
 
 def prefill(params: dict, batch: dict, cfg: ModelConfig,
             max_len: Optional[int] = None,
-            adapter_ids: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
+            adapter_ids: Optional[jax.Array] = None,
+            prompt_lens: Optional[jax.Array] = None) -> tuple[jax.Array, dict]:
     """Run the prompt, build caches (padded to max_len for decoding into).
 
-    Returns (last-token logits, caches)."""
+    ``prompt_lens`` (B,) serves a RAGGED wave: prompts are right-padded to
+    a shared width and row b's valid tokens are ``tokens[b, :prompt_lens
+    [b]]``. The caches come out bitwise identical to prefilling each row
+    alone (per-row sentinel cache positions; identity-frozen recurrent
+    state over padding), and the returned logits are each row's own
+    last-token logits — decode then continues from per-row positions.
+
+    Returns ((B, 1, vocab) last-token logits, caches)."""
     adapters = params.get("adapters", {}).get("stack", {})
     if cfg.family == "audio":
         if adapter_ids is not None:
@@ -213,18 +221,134 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig,
         enc_out = encdec.encode(params["backbone"]["encdec"], adapters,
                                 batch["frames"], cfg)
         tok_emb = embed(params["backbone"]["embed"], batch["tokens"])
+        lengths = prompt_lens
         x, caches = encdec.decode_seq(params["backbone"]["encdec"], adapters,
                                       tok_emb, enc_out, cfg, make_cache=True,
-                                      cache_len=max_len)
+                                      cache_len=max_len, lengths=lengths)
     else:
-        x, positions, _ = _embed_inputs(params, batch, cfg)
+        x, positions, n_vis = _embed_inputs(params, batch, cfg)
+        lengths = None if prompt_lens is None else prompt_lens + n_vis
         x, caches, _ = stack_seq(params["backbone"]["layers"], adapters, x,
                                  cfg, positions=positions, make_cache=True,
                                  remat=False, cache_len=max_len,
-                                 adapter_ids=adapter_ids)
-    x = rmsnorm(params["backbone"]["final_norm"], x[:, -1:])
+                                 adapter_ids=adapter_ids, lengths=lengths)
+    if lengths is None:
+        x = x[:, -1:]
+    else:                                  # per-row last VALID token
+        B = x.shape[0]
+        x = x[jnp.arange(B)[:, None], (lengths - 1)[:, None]]
+    x = rmsnorm(params["backbone"]["final_norm"], x)
     head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
     return unembed(head_tbl, x), caches
+
+
+def _scan_steps(params: dict, cfg: ModelConfig, steps: int, greedy: bool,
+                tok, caches, pos, remaining, key, adapter_ids):
+    """Scan ``steps`` decode steps with per-row positions and retirement.
+
+    The carry is (token, caches, pos (B,), remaining (B,), key); each step
+    emits the carried token then computes the next. Rows with
+    ``remaining <= 0`` are RETIRED: their cache writes are dropped, their
+    position and carried token freeze, and their emitted tokens are
+    padding the caller discards — so a retired row costs the step's FLOPs
+    (counted by the engine as ``padded_tokens``) but cannot perturb its
+    own or any other row's generation."""
+
+    def step(carry, _):
+        tok, caches, pos, remaining, key = carry
+        active = remaining > 0
+        logits, caches = decode_step(params, tok, caches, pos, cfg,
+                                     adapter_ids=adapter_ids, active=active)
+        if greedy:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        else:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits[:, -1])[:, None]
+        nxt = jnp.where(active[:, None], nxt.astype(jnp.int32), tok)
+        pos = pos + active.astype(jnp.int32)
+        remaining = remaining - active.astype(jnp.int32)
+        return (nxt, caches, pos, remaining, key), tok
+
+    carry, toks = jax.lax.scan(step, (tok, caches, pos, remaining, key),
+                               None, length=steps)
+    return jnp.swapaxes(toks[..., 0], 0, 1), carry         # (B, steps), carry
+
+
+def _prefill_state(params: dict, batch: dict, cfg: ModelConfig, cap: int,
+                   adapter_ids, prompt_lens):
+    """Shared prefill -> (tok0, caches, pos0) decode-entry state.
+
+    ``cap`` is the cache capacity in PROMPT+GENERATION tokens; the vlm
+    vision prefix is added on top internally."""
+    S = batch["tokens"].shape[1]
+    n_vis = cfg.vlm.n_vis_tokens if cfg.family == "vlm" else 0
+    logits, caches = prefill(params, batch, cfg, max_len=cap + n_vis,
+                             adapter_ids=adapter_ids, prompt_lens=prompt_lens)
+    tok0 = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    B = batch["tokens"].shape[0]
+    if prompt_lens is None:
+        pos0 = jnp.full((B,), S + n_vis, jnp.int32)
+    else:
+        pos0 = prompt_lens.astype(jnp.int32) + n_vis
+    return tok0, caches, pos0
+
+
+@functools.lru_cache(maxsize=64)
+def _wave_prefill_fn(cfg: ModelConfig, cap: int):
+    """Jitted ragged wave prefill: batch + prompt_lens -> decode state."""
+
+    def impl(params, batch, prompt_lens, adapter_ids):
+        return _prefill_state(params, batch, cfg, cap, adapter_ids,
+                              prompt_lens)
+
+    return jax.jit(impl)
+
+
+@functools.lru_cache(maxsize=64)
+def _refill_fn(cfg: ModelConfig, cap: int):
+    """Jitted in-wave slot refill: prefill fresh rows INTO a live wave.
+
+    ``batch`` holds ONLY the rows being admitted (padded to a pow2 row
+    count — usually far fewer than the wave width), and ``row_idx`` maps
+    each to its wave slot; padding rows carry an out-of-range index and
+    are dropped by the scatter. Every cache leaf has batch at dim 1
+    ((L, B, ...) group stacking), so the merge is one row-scatter per
+    leaf and the surviving rows' generation state stays bitwise
+    untouched. This is what makes the drain TRUE continuous batching: a
+    freed slot is re-prefilled between scan segments at the cost of a
+    refill-sized prefill, not a wave-sized one."""
+
+    def impl(params, batch, prompt_lens, row_idx, tok, caches, pos,
+             adapter_ids):
+        tok_n, caches_n, pos_n = _prefill_state(params, batch, cfg, cap,
+                                                adapter_ids, prompt_lens)
+
+        def merge(old, new):
+            return old.at[:, row_idx].set(new.astype(old.dtype), mode="drop")
+
+        caches = jax.tree.map(merge, caches, caches_n)
+        tok = tok.at[row_idx].set(tok_n, mode="drop")
+        pos = pos.at[row_idx].set(pos_n, mode="drop")
+        return tok, caches, pos
+
+    return jax.jit(impl)
+
+
+@functools.lru_cache(maxsize=64)
+def _segment_fn(cfg: ModelConfig, steps: int, greedy: bool):
+    """Jitted decode segment: ``steps`` scanned steps of a ragged wave.
+
+    Segment lengths are powers of two (the engine buckets them), so the
+    jit cache stays O(log max_budget) across any mix of per-row budgets
+    instead of growing per distinct budget."""
+
+    def impl(params, tok, caches, pos, remaining, key, adapter_ids):
+        toks, (tok, caches, pos, remaining, key) = _scan_steps(
+            params, cfg, steps, greedy, tok, caches, pos, remaining, key,
+            adapter_ids)
+        return toks, tok, caches, pos, remaining, key
+
+    return jax.jit(impl)
 
 
 @functools.lru_cache(maxsize=64)
@@ -233,35 +357,22 @@ def _generate_fn(cfg: ModelConfig, gen: int, greedy: bool):
 
     The whole request — prefill, ``gen`` decode steps, sampling — is ONE
     jitted computation: the decode loop is a ``jax.lax.scan`` whose carry
-    (token, caches, key) stays on device, so XLA donates the cache buffers
-    step-to-step and the host dispatches once per request instead of once
-    per token. Cached per (cfg, gen, greedy); jit re-specializes per input
-    shape as usual.
+    (token, caches, per-row positions, key) stays on device, so XLA
+    donates the cache buffers step-to-step and the host dispatches once
+    per request instead of once per token. Cached per (cfg, gen, greedy);
+    jit re-specializes per input shape as usual.
     """
 
     def impl(params: dict, batch: dict, key: jax.Array,
-             adapter_ids) -> jax.Array:
+             adapter_ids, prompt_lens) -> jax.Array:
         S = batch["tokens"].shape[1]
-        n_vis = cfg.vlm.n_vis_tokens if cfg.family == "vlm" else 0
-        logits, caches = prefill(params, batch, cfg, max_len=S + n_vis + gen,
-                                 adapter_ids=adapter_ids)
-        tok0 = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-
-        def step(carry, i):
-            tok, caches, key = carry
-            pos = jnp.asarray(S + n_vis, jnp.int32) + i
-            logits, caches = decode_step(params, tok, caches, pos, cfg,
-                                         adapter_ids=adapter_ids)
-            if greedy:
-                nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-            else:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(sub, logits[:, -1])[:, None]
-            return (nxt.astype(jnp.int32), caches, key), tok
-
-        (_, _, _), toks = jax.lax.scan(
-            step, (tok0, caches, key), jnp.arange(gen, dtype=jnp.int32))
-        return jnp.swapaxes(toks[..., 0], 0, 1)            # (B, gen)
+        tok0, caches, pos0 = _prefill_state(params, batch, cfg, S + gen,
+                                            adapter_ids, prompt_lens)
+        B = batch["tokens"].shape[0]
+        remaining = jnp.full((B,), gen, jnp.int32)
+        toks, _ = _scan_steps(params, cfg, gen, greedy, tok0, caches, pos0,
+                              remaining, key, adapter_ids)
+        return toks                                        # (B, gen)
 
     return jax.jit(impl)
 
@@ -270,7 +381,8 @@ def generate_scan(params: dict, cfg: ModelConfig, prompts: jax.Array, *,
                   gen: int, extra_batch: Optional[dict] = None,
                   greedy: bool = True,
                   key: Optional[jax.Array] = None,
-                  adapter_ids: Optional[jax.Array] = None) -> jax.Array:
+                  adapter_ids: Optional[jax.Array] = None,
+                  prompt_lens=None) -> jax.Array:
     """Single-dispatch generation: prefill + scanned decode in one jit call.
 
     prompts: (B, S) int32. Returns (B, gen) generated tokens. Matches the
@@ -283,30 +395,43 @@ def generate_scan(params: dict, cfg: ModelConfig, prompts: jax.Array, *,
     AdapterBank stacked-adapter layout and row i generates with adapter
     slot ``adapter_ids[i]`` — token-for-token equal to serving row i alone
     with that slot's adapters.
+
+    ``prompt_lens`` (B,) int32 serves a RAGGED wave: prompts are
+    right-padded to the shared width and row b generates from position
+    ``prompt_lens[b]`` — token-for-token equal to serving row b alone with
+    its unpadded prompt.
     """
     batch = {"tokens": prompts, **(extra_batch or {})}
     if greedy or key is None:
         greedy, key = True, jax.random.PRNGKey(0)          # key unused
     ids = None if adapter_ids is None else \
         jnp.asarray(adapter_ids, jnp.int32)
-    return _generate_fn(cfg, int(gen), bool(greedy))(params, batch, key, ids)
+    lens = None if prompt_lens is None else \
+        jnp.asarray(prompt_lens, jnp.int32)
+    return _generate_fn(cfg, int(gen), bool(greedy))(params, batch, key, ids,
+                                                     lens)
 
 
 def decode_step(params: dict, token: jax.Array, caches: dict,
                 pos: jax.Array, cfg: ModelConfig,
-                adapter_ids: Optional[jax.Array] = None
+                adapter_ids: Optional[jax.Array] = None,
+                active: Optional[jax.Array] = None
                 ) -> tuple[jax.Array, dict]:
-    """One token. token: (B, 1) int32; pos: scalar int32 (current position)."""
+    """One token. token: (B, 1) int32; pos: scalar or per-row (B,) int32
+    (current position). ``active`` (B,) bool freezes retired rows' caches
+    (ragged serving — see :func:`_scan_steps`)."""
     adapters = params.get("adapters", {}).get("stack", {})
+    B = token.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     x = embed(params["backbone"]["embed"], token)
     x = shard(x, "batch", "seq", "d_model")
     if cfg.family == "audio":
         x, caches = encdec.decode_step(params["backbone"]["encdec"], adapters,
-                                       x, caches, cfg, pos=pos)
+                                       x, caches, cfg, pos=pos, active=active)
     else:
         x, caches = stack_decode(params["backbone"]["layers"], adapters, x,
                                  caches, cfg, pos=pos,
-                                 adapter_ids=adapter_ids)
+                                 adapter_ids=adapter_ids, active=active)
     x = rmsnorm(params["backbone"]["final_norm"], x)
     head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
     logits = unembed(head_tbl, x)

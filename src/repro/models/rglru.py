@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
-from repro.models.ssm import _conv1d_causal
+from repro.models.ssm import _conv1d_causal, _ragged_conv_tail
 from repro.sharding.rules import ParamSpec, shard
 
 
@@ -39,8 +39,15 @@ def rglru_state0_spec(cfg: ModelConfig, layers: int) -> ParamSpec:
 
 
 def rglru_seq(params: dict, adapters: Optional[dict], x: jax.Array,
-              cfg: ModelConfig, *, make_cache: bool = False):
-    """Full-sequence recurrent block. x: (B, S, d)."""
+              cfg: ModelConfig, *, make_cache: bool = False,
+              lengths: Optional[jax.Array] = None):
+    """Full-sequence recurrent block. x: (B, S, d).
+
+    ``lengths`` (B,) marks ragged right-padded rows: padded columns get
+    ``r_gate = -1e9`` so ``a_t = exp(sigmoid(-1e9)·log_a) = 1`` exactly
+    and the input branch ``sqrt(1 - a_t²)·… = 0`` — the recurrence is the
+    identity there and ``hT`` is bitwise the state after row b's last
+    valid token. The conv cache tail is gathered per row."""
     B, S, _ = x.shape
     xb = x @ params["in_x"]
     yb = jax.nn.gelu(x @ params["in_y"])
@@ -48,6 +55,9 @@ def rglru_seq(params: dict, adapters: Optional[dict], x: jax.Array,
     xc = _conv1d_causal(xb, params["conv_w"], params["conv_b"])
     r_gate = xc @ params["w_r"]
     i_gate = xc @ params["w_i"]
+    if lengths is not None:
+        valid = jnp.arange(S)[None, :, None] < lengths[:, None, None]
+        r_gate = jnp.where(valid, r_gate, jnp.asarray(-1e9, r_gate.dtype))
     h0 = None
     if adapters is not None and "state0" in adapters:
         s0 = adapters["state0"]
@@ -69,8 +79,11 @@ def rglru_seq(params: dict, adapters: Optional[dict], x: jax.Array,
     cache = None
     if make_cache:
         K = cfg.hybrid.conv_width
-        conv_tail = xb[:, -(K - 1):] if S >= K - 1 else jnp.pad(
-            xb, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        if lengths is None:
+            conv_tail = xb[:, -(K - 1):] if S >= K - 1 else jnp.pad(
+                xb, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        else:
+            conv_tail = _ragged_conv_tail(xb, lengths, K)
         cache = {"h": hT, "conv": conv_tail}
     return out, cache
 

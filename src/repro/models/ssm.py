@@ -64,8 +64,16 @@ def _ssm_inputs(params, x, cfg: ModelConfig):
 
 
 def ssm_seq(params: dict, adapters: Optional[dict], x: jax.Array,
-            cfg: ModelConfig, *, make_cache: bool = False):
-    """Full-sequence Mamba block. x: (B, S, d). Returns (y, cache or None)."""
+            cfg: ModelConfig, *, make_cache: bool = False,
+            lengths: Optional[jax.Array] = None):
+    """Full-sequence Mamba block. x: (B, S, d). Returns (y, cache or None).
+
+    ``lengths`` (B,) marks ragged right-padded rows: padded columns get
+    ``dt = 0`` so the recurrence is the exact identity there
+    (``h = exp(0·A)·h + 0``) — the carried state ``hT`` is bitwise the
+    state after row b's last VALID token, whatever the padded length.
+    The conv cache tail is gathered per row from the last valid columns.
+    """
     B, S, _ = x.shape
     di = cfg.d_inner
     xz = x @ params["in_proj"]
@@ -73,6 +81,9 @@ def ssm_seq(params: dict, adapters: Optional[dict], x: jax.Array,
     xin = shard(xin, "batch", "attn_seq", "d_inner")
     xc = jax.nn.silu(_conv1d_causal(xin, params["conv_w"], params["conv_b"]))
     dt, A, Bm, C = _ssm_inputs(params, xc, cfg)
+    if lengths is not None:
+        valid = jnp.arange(S)[None, :] < lengths[:, None]      # (B, S)
+        dt = jnp.where(valid[..., None], dt, jnp.zeros((), dt.dtype))
     h0 = None
     if adapters is not None and "state0" in adapters:
         s0 = adapters["state0"]
@@ -95,10 +106,25 @@ def ssm_seq(params: dict, adapters: Optional[dict], x: jax.Array,
     cache = None
     if make_cache:
         K = cfg.ssm.d_conv
-        conv_tail = xin[:, -(K - 1):] if S >= K - 1 else jnp.pad(
-            xin, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        if lengths is None:
+            conv_tail = xin[:, -(K - 1):] if S >= K - 1 else jnp.pad(
+                xin, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        else:
+            conv_tail = _ragged_conv_tail(xin, lengths, K)
         cache = {"h": hT, "conv": conv_tail}
     return out, cache
+
+
+def _ragged_conv_tail(xin: jax.Array, lengths: jax.Array, K: int) -> jax.Array:
+    """Per-row last K-1 VALID columns (zeros where the row is shorter).
+
+    xin: (B, S, D); lengths: (B,). Returns (B, K-1, D) — the causal-conv
+    state a solo (unpadded) run of row b would have cached."""
+    S = xin.shape[1]
+    idx = lengths[:, None] - (K - 1) + jnp.arange(K - 1)[None]     # (B, K-1)
+    tail = jnp.take_along_axis(xin, jnp.clip(idx, 0, S - 1)[..., None],
+                               axis=1)
+    return jnp.where((idx >= 0)[..., None], tail, jnp.zeros((), xin.dtype))
 
 
 def ssm_decode(params: dict, adapters: Optional[dict], x: jax.Array,

@@ -170,19 +170,19 @@ def _select_state0(a: dict, adapter_ids):
 
 def _apply_seq(kind: str, p: dict, a: dict, x, cfg: ModelConfig, *,
                positions, make_cache: bool, cache_len=None,
-               adapter_ids=None):
+               adapter_ids=None, lengths=None):
     """Full-sequence sub-layer. Returns (x, cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     cache = None
     if kind == "ssm":
         h, cache = ssm_mod.ssm_seq(p["mix"], _select_state0(a, adapter_ids),
                                    rmsnorm(p["ln1"], x), cfg,
-                                   make_cache=make_cache)
+                                   make_cache=make_cache, lengths=lengths)
         return x + h, cache, aux
     if kind == "rglru":
         h, cache = rglru_mod.rglru_seq(p["mix"], _select_state0(a, adapter_ids),
                                        rmsnorm(p["ln1"], x), cfg,
-                                       make_cache=make_cache)
+                                       make_cache=make_cache, lengths=lengths)
         x = x + h
         x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x))
         return x, cache, aux
@@ -192,7 +192,8 @@ def _apply_seq(kind: str, p: dict, a: dict, x, cfg: ModelConfig, *,
                                       positions=positions, window=w,
                                       make_cache=make_cache,
                                       cache_len=cache_len,
-                                      adapter_ids=adapter_ids)
+                                      adapter_ids=adapter_ids,
+                                      lengths=lengths)
     x = x + h
     if kind == "moe":
         h2, aux = moe_apply(p["moe"], rmsnorm(p["ln2"], x), cfg)
@@ -201,21 +202,32 @@ def _apply_seq(kind: str, p: dict, a: dict, x, cfg: ModelConfig, *,
     return x + h2, cache, aux
 
 
+def _freeze_inactive(new_cache: dict, old_cache: dict, active):
+    """Per-row cache select: retired rows keep their old (frozen) state."""
+    if active is None:
+        return new_cache
+    return jax.tree.map(
+        lambda n, o: jnp.where(active.reshape((-1,) + (1,) * (n.ndim - 1)),
+                               n, o), new_cache, old_cache)
+
+
 def _apply_decode(kind: str, p: dict, a: dict, x, cache, cfg: ModelConfig, *,
-                  pos, adapter_ids=None):
+                  pos, adapter_ids=None, active=None):
     if kind == "ssm":
-        h, cache = ssm_mod.ssm_decode(p["mix"], a, rmsnorm(p["ln1"], x), cache,
-                                      cfg)
-        return x + h, cache
+        h, new = ssm_mod.ssm_decode(p["mix"], a, rmsnorm(p["ln1"], x), cache,
+                                    cfg)
+        return x + h, _freeze_inactive(new, cache, active)
     if kind == "rglru":
-        h, cache = rglru_mod.rglru_decode(p["mix"], a, rmsnorm(p["ln1"], x),
-                                          cache, cfg)
+        h, new = rglru_mod.rglru_decode(p["mix"], a, rmsnorm(p["ln1"], x),
+                                        cache, cfg)
         x = x + h
-        return x + mlp(p["mlp"], rmsnorm(p["ln2"], x)), cache
+        return x + mlp(p["mlp"], rmsnorm(p["ln2"], x)), \
+            _freeze_inactive(new, cache, active)
     w = attn_window(cfg, kind)
     h, cache = attn_mod.attention_decode(p["attn"], a, rmsnorm(p["ln1"], x),
                                          cache, cfg, pos=pos, window=w,
-                                         adapter_ids=adapter_ids)
+                                         adapter_ids=adapter_ids,
+                                         active=active)
     x = x + h
     if kind == "moe":
         h2, _ = moe_apply(p["moe"], rmsnorm(p["ln2"], x), cfg)
@@ -230,13 +242,20 @@ def _apply_decode(kind: str, p: dict, a: dict, x, cache, cfg: ModelConfig, *,
 
 def stack_seq(params: dict, adapters: dict, x: jax.Array, cfg: ModelConfig, *,
               positions: jax.Array, make_cache: bool = False,
-              remat: bool = False, cache_len=None, adapter_ids=None):
+              remat: bool = False, cache_len=None, adapter_ids=None,
+              lengths=None):
     """Run all groups over a full sequence.
 
     With ``adapter_ids`` (multi-tenant serving) adapter leaves carry an
     ``n_slots`` dim after the scanned layer dim — ``(L, n_slots, ...)``,
     the AdapterBank serving layout — so every layer slice hands the whole
     slot stack to the batched multi-LoRA projections.
+
+    ``lengths`` (B,) serves ragged right-padded rows: attention caches get
+    per-row sentinel positions beyond each row's length, and the
+    recurrent sub-layers (ssm/rglru) freeze their state identity-exactly
+    over padded columns — so the caches a ragged prefill builds are
+    bitwise the caches each row would build alone.
 
     Returns (x, caches | None, aux_sum)."""
     caches: dict = {}
@@ -254,7 +273,8 @@ def stack_seq(params: dict, adapters: dict, x: jax.Array, cfg: ModelConfig, *,
                                       cfg, positions=positions,
                                       make_cache=make_cache,
                                       cache_len=cache_len,
-                                      adapter_ids=adapter_ids)
+                                      adapter_ids=adapter_ids,
+                                      lengths=lengths)
                 aux = aux + a_
                 if c is not None:
                     lcaches[f"s{i}"] = c
@@ -270,8 +290,11 @@ def stack_seq(params: dict, adapters: dict, x: jax.Array, cfg: ModelConfig, *,
 
 def stack_decode(params: dict, adapters: dict, x: jax.Array,
                  caches: dict, cfg: ModelConfig, *, pos: jax.Array,
-                 adapter_ids=None):
-    """Single-token step through all groups. Returns (x, new_caches)."""
+                 adapter_ids=None, active=None):
+    """Single-token step through all groups. Returns (x, new_caches).
+
+    ``pos`` may be per-row (B,) (ragged serving); ``active`` (B,) bool
+    freezes retired rows' caches while the rest of the wave decodes."""
     new_caches: dict = {}
     for name, kinds, n in groups_for(cfg):
         gp, ga = params[name], adapters.get(name, {})
@@ -284,7 +307,8 @@ def stack_decode(params: dict, adapters: dict, x: jax.Array,
                 key = f"s{i}"
                 x, c = _apply_decode(k, lp[key], la.get(key, {}), x,
                                      lc[key], cfg, pos=pos,
-                                     adapter_ids=adapter_ids)
+                                     adapter_ids=adapter_ids,
+                                     active=active)
                 new_lc[key] = c
             return x, new_lc
 

@@ -77,7 +77,7 @@ def test_bank_stacked_layout(setup):
 # ---------------------------------------------------------------------------
 
 def test_mixed_domain_drain_matches_per_domain_serving(setup):
-    """ONE drain, 3 domains interleaved across two length buckets, mixed
+    """ONE drain, 3 domains interleaved across two prompt lengths, mixed
     max_new_tokens — token-for-token equal to per-domain engine drains."""
     cfg, backbone, adapters = setup
     bank = AdapterBank.create(adapters)
@@ -156,13 +156,12 @@ def test_engine_domain_validation(setup):
     with pytest.raises(KeyError, match="no adapter slot"):
         engine.submit(np.zeros(8, np.int32), 2, domain="nope")
     # all-or-none tenancy is enforced AT SUBMIT (the offending request is
-    # rejected; already-queued requests are not poisoned) — even when the
-    # mix would land in a different length bucket and never share a wave
+    # rejected; already-queued requests are not poisoned)
     engine.submit(np.zeros(8, np.int32), 2, domain="nlp")
     with pytest.raises(ValueError, match="carry a domain"):
         engine.submit(np.zeros(8, np.int32), 2)              # tenant-less
     with pytest.raises(ValueError, match="carry a domain"):
-        engine.submit(np.zeros(12, np.int32), 2)             # other bucket
+        engine.submit(np.zeros(12, np.int32), 2)             # other length
     assert engine.pending() == 1                             # queue intact
     comps, _ = engine.run(bank.serving_params(backbone))
     assert len(comps) == 1

@@ -36,8 +36,8 @@ def test_engine_matches_direct_generation(setup):
 
 
 def test_engine_length_buckets_and_budgets(setup):
-    """Mixed prompt lengths + per-request budgets: per-slot length tracking
-    packs equal-length waves and truncates to each request's budget."""
+    """Mixed prompt lengths + per-request budgets share ONE ragged drain:
+    each request is served exactly its own budget."""
     cfg, params = setup
     key = jax.random.PRNGKey(2)
     engine = DecodeEngine(cfg, slots=3)
@@ -56,8 +56,9 @@ def test_engine_length_buckets_and_budgets(setup):
 
 
 def test_engine_extras_stay_bound_to_requests():
-    """Length-bucketing reorders the queue; each request must still be
-    conditioned on ITS OWN vision row (not its submission-order slot's)."""
+    """Packing and in-wave refill move requests between slots; each request
+    must still be conditioned on ITS OWN vision row (not its
+    submission-order slot's)."""
     cfg = get_config("llava-next-mistral-7b").reduced().with_(dtype="float32")
     params = M.init(cfg, jax.random.PRNGKey(0))
     key = jax.random.PRNGKey(4)
@@ -67,7 +68,7 @@ def test_engine_extras_stay_bound_to_requests():
     long = np.asarray(jax.random.randint(key, (2, 12), 0, cfg.vocab_size))
 
     engine = DecodeEngine(cfg, slots=2)
-    uids = []                                  # interleave the length buckets
+    uids = []                                  # interleave the two lengths
     for i, toks in enumerate([short[0], long[0], short[1], long[1]]):
         uids.append(engine.submit(toks, 4,
                                   extras={"vision_embeds": vis[i]}))
@@ -95,11 +96,12 @@ def test_engine_slot_table_tracks_positions(setup):
     cfg, params = setup
     engine = DecodeEngine(cfg, slots=2)
     engine.submit(np.zeros(10, np.int32), 4)
-    wave = engine._pack_wave()
-    assert len(wave) == 1
-    slot = engine.slot_table[0]
+    packed = engine._fill_slots()
+    assert len(packed) == 1
+    idx, req = packed[0]
+    slot = engine.slot_table[idx]
     assert slot.active and slot.prompt_len == 10 and slot.target == 4
-    engine._queue.appendleft(wave[0])           # restore for a clean drain
+    engine._queue.appendleft(req)               # restore for a clean drain
     slot.recycle()
     comps, _ = engine.run(params)
     assert len(comps) == 1

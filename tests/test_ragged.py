@@ -1,0 +1,239 @@
+"""Ragged continuous batching: per-row positions end-to-end.
+
+Invariants under test:
+- a mixed-length, mixed-budget (and mixed-domain) engine drain is
+  token-for-token identical to serving each request alone — across the
+  dense, ssm, and hybrid layer stacks;
+- in-wave slot refill (slots < requests, forcing mid-wave re-prefill)
+  changes nothing about any request's tokens;
+- per-row retirement makes ``padded_tokens`` (wasted slot-steps) exactly
+  zero when the queue keeps every slot busy to the end;
+- the decode-segment jit cache is bounded by pow2 bucketing: new budget
+  mixes stop adding compile entries;
+- ``attention.cache_spec`` matches the cache shapes prefill actually
+  builds, across window < seq_len and window > seq_len.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.adapter_bank import AdapterBank
+from repro.launch.engine import DecodeEngine
+from repro.models import attention as attn_mod
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(7)
+
+# dense, ssm, hybrid (sliding-window attn + rglru) stacks per the ROADMAP
+ARCHS = ["qwen2-7b", "falcon-mamba-7b", "recurrentgemma-2b"]
+
+
+def _ragged_requests(cfg, n=5, seed=3):
+    """Mixed lengths AND mixed budgets, nothing length-aligned."""
+    lens = [5, 9, 12, 7, 10][:n]
+    gens = [4, 2, 6, 3, 5][:n]
+    rows = [np.asarray(jax.random.randint(
+        jax.random.fold_in(KEY, seed + i), (l,), 0, cfg.vocab_size,
+        dtype=jnp.int32)) for i, l in enumerate(lens)]
+    return rows, gens
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_ragged_drain_matches_per_request(arch):
+    """One mixed-length mixed-budget drain == serving each request alone."""
+    cfg = get_config(arch).reduced().with_(dtype="float32", vocab_size=64)
+    params = M.init(cfg, KEY)
+    rows, gens = _ragged_requests(cfg)
+    engine = DecodeEngine(cfg, slots=4)        # 5 requests -> in-wave refill
+    uids = [engine.submit(r, g) for r, g in zip(rows, gens)]
+    comps, stats = engine.run(params)
+    assert stats.requests == len(rows)
+    by_uid = {c.uid: c.tokens for c in comps}
+    for uid, r, g in zip(uids, rows, gens):
+        want = np.asarray(M.generate_scan(params, cfg, jnp.asarray(r[None]),
+                                          gen=g))[0]
+        np.testing.assert_array_equal(by_uid[uid], want)
+    assert engine.pending() == 0
+    assert all(not s.active for s in engine.slot_table)
+
+
+def test_ragged_generate_scan_matches_solo():
+    """generate_scan(prompt_lens=...) == per-row unpadded generation."""
+    cfg = get_config("qwen2-7b").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    params = M.init(cfg, KEY)
+    rows, _ = _ragged_requests(cfg, n=3)
+    S = max(len(r) for r in rows)
+    padded = np.zeros((3, S), np.int32)
+    for i, r in enumerate(rows):
+        padded[i, :len(r)] = r
+    got = np.asarray(M.generate_scan(
+        params, cfg, jnp.asarray(padded), gen=4,
+        prompt_lens=jnp.asarray([len(r) for r in rows])))
+    for i, r in enumerate(rows):
+        want = np.asarray(M.generate_scan(params, cfg, jnp.asarray(r[None]),
+                                          gen=4))
+        np.testing.assert_array_equal(got[i], want[0])
+
+
+def test_in_wave_refill_matches_wave_boundary_refill():
+    """A tight drain (slots=2, refills mid-wave) serves the same tokens as
+    a wide drain (slots >= requests, no refill at all)."""
+    cfg = get_config("qwen2-7b").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    params = M.init(cfg, KEY)
+    rows, gens = _ragged_requests(cfg)
+
+    tight = DecodeEngine(cfg, slots=2)
+    uids_t = [tight.submit(r, g) for r, g in zip(rows, gens)]
+    comps_t, stats_t = tight.run(params)
+    assert stats_t.waves > 1                   # refill actually happened
+
+    wide = DecodeEngine(cfg, slots=len(rows))
+    uids_w = [wide.submit(r, g) for r, g in zip(rows, gens)]
+    comps_w, stats_w = wide.run(params)
+    assert stats_w.waves == 1                  # everything fit up front
+
+    by_t = {c.uid: c.tokens for c in comps_t}
+    by_w = {c.uid: c.tokens for c in comps_w}
+    for ut, uw in zip(uids_t, uids_w):
+        np.testing.assert_array_equal(by_t[ut], by_w[uw])
+
+
+def test_ragged_mixed_domain_drain():
+    """Ragged rows compose with multi-tenant adapter_ids: mixed lengths,
+    budgets, AND domains in one drain == solo serving per request."""
+    cfg = get_config("qwen2-7b").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    ks = jax.random.split(KEY, 4)
+    doms = {n: M.init(cfg, ks[i])["adapters"] for i, n in enumerate("abc")}
+    backbone = M.init(cfg, ks[3])["backbone"]
+    bank = AdapterBank.create(doms)
+    rows, gens = _ragged_requests(cfg)
+    order = ["b", "c", "a", "c", "b"]
+
+    engine = DecodeEngine(cfg, slots=3, bank=bank)
+    uids = [engine.submit(r, g, domain=d)
+            for r, g, d in zip(rows, gens, order)]
+    comps, _ = engine.run(bank.serving_params(backbone))
+    by_uid = {c.uid: c.tokens for c in comps}
+    for uid, r, g, d in zip(uids, rows, gens, order):
+        want = np.asarray(M.generate_scan(
+            {"backbone": backbone, "adapters": doms[d]}, cfg,
+            jnp.asarray(r[None]), gen=g))[0]
+        np.testing.assert_array_equal(by_uid[uid], want)
+
+
+def test_padded_tokens_zero_with_full_queue():
+    """With per-row retirement + in-wave refill, a drain whose queue keeps
+    every slot busy to the very end wastes ZERO slot-steps."""
+    cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    params = M.init(cfg, KEY)
+    engine = DecodeEngine(cfg, slots=2)
+    prompts = np.asarray(jax.random.randint(KEY, (4, 8), 0, cfg.vocab_size,
+                                            dtype=jnp.int32))
+    # FIFO lanes: A serves 4 then 4, B serves 2 then refills to 2+2 — every
+    # retirement is immediately refilled, so every executed step serves a
+    # token in every slot
+    for p, g in zip(prompts, [4, 2, 4, 2]):
+        engine.submit(p, g)
+    _, stats = engine.run(params)
+    assert stats.tokens == 12
+    assert stats.padded_tokens == 0
+    assert stats.utilization == 1.0
+
+
+def test_padded_tokens_counts_idle_slots():
+    """Uneven budgets with an empty queue leave retired slots idle — the
+    wasted steps are ledgered, and tokens still only counts served."""
+    cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    params = M.init(cfg, KEY)
+    engine = DecodeEngine(cfg, slots=2)
+    prompts = np.asarray(jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size,
+                                            dtype=jnp.int32))
+    engine.submit(prompts[0], 8)
+    engine.submit(prompts[1], 2)
+    _, stats = engine.run(params)
+    assert stats.tokens == 10
+    # the budget-2 slot idles while the budget-8 row finishes: 6 steps
+    assert stats.padded_tokens == 6
+    assert 0.0 < stats.utilization < 1.0
+
+
+def test_zero_budget_requests_complete_empty():
+    """max_new_tokens=0 must complete immediately with empty tokens, free
+    its slot for the rest of the drain, and not poison later drains."""
+    cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    params = M.init(cfg, KEY)
+    engine = DecodeEngine(cfg, slots=2)
+    prompts = np.asarray(jax.random.randint(KEY, (3, 8), 0, cfg.vocab_size,
+                                            dtype=jnp.int32))
+    u0 = engine.submit(prompts[0], 0)
+    u1 = engine.submit(prompts[1], 3)
+    u2 = engine.submit(prompts[2], 0)
+    comps, stats = engine.run(params)
+    by_uid = {c.uid: c.tokens for c in comps}
+    assert stats.requests == 3 and stats.tokens == 3
+    assert by_uid[u0].shape == (0,) and by_uid[u2].shape == (0,)
+    want = np.asarray(M.generate_scan(params, cfg,
+                                      jnp.asarray(prompts[1:2]), gen=3))[0]
+    np.testing.assert_array_equal(by_uid[u1], want)
+    assert all(not s.active for s in engine.slot_table)   # no slot leak
+    # the engine stays serviceable after an all-zero-budget drain
+    engine.submit(prompts[0], 0)
+    comps, _ = engine.run(params)
+    assert len(comps) == 1 and comps[0].tokens.shape == (0,)
+
+
+def test_segment_jit_cache_stops_growing():
+    """Budgets are served via pow2-bucketed scan segments: a fresh drain
+    with a DIFFERENT budget mix (same pow2 envelope) compiles nothing new."""
+    cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    params = M.init(cfg, KEY)
+    prompts = np.asarray(jax.random.randint(KEY, (6, 8), 0, cfg.vocab_size,
+                                            dtype=jnp.int32))
+
+    def drain(budgets):
+        engine = DecodeEngine(cfg, slots=3)
+        for p, g in zip(prompts, budgets):
+            engine.submit(p, g)
+        engine.run(params)
+
+    before = M._segment_fn.cache_info().currsize
+    drain([5, 3, 7, 2, 6, 4])
+    seen = M._segment_fn.cache_info().currsize
+    # every segment length is a power of two <= the largest budget (7):
+    # at most {1, 2, 4} new entries regardless of how budgets mix
+    assert seen - before <= 3
+    drain([7, 2, 5, 6, 3, 4])                  # new mix, same pow2 envelope
+    drain([4, 4, 6, 2, 7, 5])
+    assert M._segment_fn.cache_info().currsize == seen
+
+
+@pytest.mark.parametrize("window,seq_len", [(4, 12), (16, 12), (0, 12)])
+def test_cache_spec_matches_built_cache(window, seq_len):
+    """attention.cache_spec must describe the cache prefill actually
+    builds — rolling buffer of exactly `window` slots when sliding
+    (window above OR below seq_len), `seq_len` otherwise."""
+    cfg = get_config("qwen2-7b").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    if window:
+        cfg = cfg.with_(attn_variant="sliding", sliding_window=window)
+    params = M.init(cfg, KEY)
+    toks = jax.random.randint(KEY, (2, seq_len), 0, cfg.vocab_size,
+                              dtype=jnp.int32)
+    _, caches = M.prefill(params, {"tokens": toks}, cfg, max_len=seq_len)
+    spec = M.cache_spec(cfg, batch=2, seq_len=seq_len)
+    built_shapes = jax.tree.map(jnp.shape, caches)
+    spec_shapes = jax.tree.map(lambda s: tuple(s.shape), spec,
+                               is_leaf=lambda x: hasattr(x, "shape")
+                               and not isinstance(x, dict))
+    assert built_shapes == spec_shapes
