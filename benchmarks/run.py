@@ -11,8 +11,9 @@ import time
 import traceback
 
 ALL = ["table5_scheduler", "fig2_comm", "kernels_bench", "decode_bench",
-       "serve_bench", "ragged_bench", "finetune_bench", "fig6_pretraining",
-       "fig7_peft", "table3_noniid", "table4_clusters", "roofline_report"]
+       "serve_bench", "ragged_bench", "finetune_bench", "shard_bench",
+       "fig6_pretraining", "fig7_peft", "table3_noniid", "table4_clusters",
+       "roofline_report"]
 
 
 def main() -> None:

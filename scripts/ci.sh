@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# One-command verify recipe: dev deps + tier-1 tests + kernel smoke.
+# One-command verify recipe: dev deps + tier-1 tests + kernel + mesh smokes.
 #
 #   bash scripts/ci.sh
 #
@@ -94,3 +94,12 @@ print("[ci] interpret-mode kernel smoke OK "
       "(attn + decode + ragged per-row decode + lora fwd/bwd "
       "+ multi-lora gathered fwd)")
 PY
+
+# Host-device mesh smoke: benchmarks/shard_bench.py spawns a forced
+# 4-host-device ('data','model') mesh subprocess, hard-asserts that the
+# sharded engine drain is token-identical and the sharded HFSL round is
+# loss-identical to the unsharded path, and checks the AdapterBank slot /
+# BatchBank cluster placements (the full sweep, incl. the hot-publish
+# train-to-serve loop, lives in tests/test_mesh_sharding.py).
+python -m benchmarks.shard_bench
+echo "[ci] host-device mesh smoke OK (sharded drain + sharded HFSL round parity)"

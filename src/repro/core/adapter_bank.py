@@ -22,13 +22,23 @@ stacked pytree so a single engine wave mixes rows from different domains
 
 The bank never holds the backbone: :meth:`serving_params` pairs the shared
 frozen backbone with the stacked adapters per wave.
+
+Constructed with a ``mesh``, the bank is **slot-sharded**: every stacked
+leaf's ``n_slots`` dim is placed on the mesh's (`pod`, `data`) axes (the
+``slots`` rule in sharding/rules.py) — slot-parallel multi-tenant serving,
+where each data slice owns a subset of tenant slots and a publish's
+``dynamic_update_slice`` only writes the owning shard. Publish pins its
+out_shardings to the same placement, so the bank layout is stable across
+hot-swaps (no creeping resharding round over round).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Sequence
+from typing import Dict, Iterable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro.sharding.rules import dim_sharding
 
 
 def _slot_axis(key: str) -> int:
@@ -60,22 +70,52 @@ def _snapshot(stacked: dict, slot: jax.Array) -> dict:
     return out
 
 
-_publish_jit = jax.jit(_publish)
+# publish DONATES the stacked bank: the hot-swap is a dynamic_update_slice,
+# so with donation XLA updates the resident buffers in place instead of
+# copying the whole bank per publish (a non-donated publish doubles bank
+# memory and defeats the "jitted in-place slot update" this class exists
+# for). The old `stacked` reference is invalidated by each publish —
+# readers must re-read the attribute, which the engine does per dispatch.
+# _snapshot must NOT donate: it is a pure read that leaves the bank
+# serving. Module-level so every mesh-less bank shares one compile cache;
+# sharded banks build a per-instance publish that additionally pins
+# out_shardings (the slot placement survives the swap).
+_publish_jit = jax.jit(_publish, donate_argnums=(0,))
 _snapshot_jit = jax.jit(_snapshot)
 
 
 class AdapterBank:
     """Stacked per-domain adapter store with slot-indexed publish/serve."""
 
-    def __init__(self, domains: Sequence[str], stacked: dict):
+    def __init__(self, domains: Sequence[str], stacked: dict, *,
+                 mesh=None, rules: Optional[dict] = None):
         self.domains = tuple(domains)
         self._slot = {d: i for i, d in enumerate(self.domains)}
+        self.mesh = mesh
+        self._publish_jit = _publish_jit
+        if mesh is not None:
+            sh = self.shardings(stacked, mesh, rules)
+            stacked = jax.device_put(stacked, sh)
+            self._publish_jit = jax.jit(_publish, donate_argnums=(0,),
+                                        out_shardings=sh)
         self.stacked = stacked
         self.versions: Dict[str, int] = {d: 0 for d in self.domains}
 
+    @staticmethod
+    def shardings(stacked: dict, mesh, rules: Optional[dict] = None):
+        """NamedSharding tree: each leaf's slot dim on the `slots` axes."""
+        def sub(key):
+            axis = _slot_axis(key)
+            n = jax.tree.leaves(stacked[key])[0].shape[axis]
+            sh = dim_sharding(mesh, n, "slots", index=axis, rules=rules)
+            return jax.tree.map(lambda _: sh, stacked[key])
+        return {key: sub(key) for key in stacked}
+
     @classmethod
-    def create(cls, adapters_by_domain: Dict[str, dict]) -> "AdapterBank":
-        """Stack one adapter tree per domain into the serving layout."""
+    def create(cls, adapters_by_domain: Dict[str, dict], *,
+               mesh=None, rules: Optional[dict] = None) -> "AdapterBank":
+        """Stack one adapter tree per domain into the serving layout (with
+        a ``mesh``: slot-sharded over its `data` axis)."""
         domains = list(adapters_by_domain)
         trees = [adapters_by_domain[d] for d in domains]
         stacked = {}
@@ -84,7 +124,7 @@ class AdapterBank:
             stacked[key] = jax.tree.map(
                 lambda *leaves: jnp.stack(leaves, axis=axis),
                 *(t[key] for t in trees))
-        return cls(domains, stacked)
+        return cls(domains, stacked, mesh=mesh, rules=rules)
 
     # -- addressing ---------------------------------------------------------
     @property
@@ -107,16 +147,20 @@ class AdapterBank:
 
     # -- publish / acquire --------------------------------------------------
     def publish(self, domain: str, adapters: dict) -> None:
-        """Hot-swap one domain's adapters in place (jitted update at the
-        slot; the next wave that reads :attr:`stacked` serves the new
-        version — no stale reads across waves)."""
+        """Hot-swap one domain's adapters in place (jitted, DONATED update
+        at the slot — the resident bank buffers are reused, never copied;
+        the next wave that reads :attr:`stacked` serves the new version —
+        no stale reads across waves). Holding a pre-publish reference to
+        ``stacked`` and using it after the publish is an error (the buffer
+        is donated); re-read the attribute per dispatch."""
         slot = jnp.asarray(self.slot(domain), jnp.int32)
-        self.stacked = _publish_jit(self.stacked, adapters, slot)
+        self.stacked = self._publish_jit(self.stacked, adapters, slot)
         self.versions[domain] += 1
 
     def snapshot(self, domain: str) -> dict:
         """Slice one domain's adapter tree out of the bank (training-side
-        acquire; also the per-domain baseline for parity tests)."""
+        acquire; also the per-domain baseline for parity tests). Unlike
+        :meth:`publish` this never donates — the bank keeps serving."""
         slot = jnp.asarray(self.slot(domain), jnp.int32)
         return _snapshot_jit(self.stacked, slot)
 

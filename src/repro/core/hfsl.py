@@ -38,7 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
-from repro.sharding.rules import ParamSpec, shard
+from repro.sharding.rules import (ParamSpec, dim_sharding, hfsl_round_rules,
+                                  named_shardings, shard, use_rules)
 
 
 # ---------------------------------------------------------------------------
@@ -85,6 +86,23 @@ def hfsl_state_spec(cfg, n_clusters: int, optimizer: Optimizer,
         "opt": opt,
         "step": ParamSpec((), jnp.int32, (), init="zeros"),
     }
+
+
+def hfsl_state_shardings(cfg, n_clusters: int, optimizer: Optimizer,
+                         model_spec_fn: Callable, mesh,
+                         rules: Optional[dict] = None) -> dict:
+    """NamedSharding tree for the full HFSL train state on ``mesh``.
+
+    Derived from :func:`hfsl_state_spec` via rules.partition_specs: the
+    adapter replicas / optimizer moments put their leading ``cluster`` dim
+    on the (`pod`, `data`) axes, the backbone FSDP-shards where dims
+    divide. This is both what init-time ``jax.device_put`` should place
+    (sharded jit inputs must already match the pinned in_shardings) and
+    what make_hfsl_round(mesh=...) pins — the two agree by construction.
+    """
+    rules = rules or hfsl_round_rules(cfg.family)
+    spec = hfsl_state_spec(cfg, n_clusters, optimizer, model_spec_fn)
+    return named_shardings(spec, mesh, rules)
 
 
 def init_hfsl_state(key: jax.Array, cfg, n_clusters: int,
@@ -180,13 +198,19 @@ def _sync_at_boundary(adapters_c, new_step, *, sync_every: int,
 
 def _make_step_body(cfg, optimizer: Optimizer, loss_fn: Callable, *,
                     sync_every: int, clip_norm: float, always_sync: bool,
-                    microbatches: int) -> Callable:
+                    microbatches: int, spmd_axes=None) -> Callable:
+    """``spmd_axes`` names the mesh axes carrying the cluster dim (mesh-
+    native rounds): the cluster vmap runs with ``spmd_axis_name`` so the
+    activation shard() constraints inside the per-cluster forward stay
+    aligned — vmap inserts the mapped cluster dim into every inner spec
+    instead of letting it shift the constraint onto the wrong dims."""
     one_cluster = _make_cluster_update(cfg, optimizer, loss_fn, clip_norm,
                                        microbatches)
 
     def step(state: dict, batch: dict) -> tuple[dict, dict]:
         adapters_c, opt_c, loss_c, aux_c = jax.vmap(
-            one_cluster, in_axes=(None, 0, 0, 0))(
+            one_cluster, in_axes=(None, 0, 0, 0),
+            spmd_axis_name=spmd_axes)(
             state["backbone"], state["adapters_c"], state["opt"], batch)
         new_step = state["step"] + 1
         adapters_c = _sync_at_boundary(adapters_c, new_step,
@@ -224,7 +248,9 @@ def make_hfsl_round(cfg, optimizer: Optimizer, loss_fn: Callable, *,
                     steps: int, sync_every: int = 1, clip_norm: float = 0.0,
                     always_sync: bool = False, microbatches: int = 1,
                     remat: Optional[bool] = None, jit: bool = True,
-                    donate: bool = False) -> Callable:
+                    donate: bool = False, mesh=None,
+                    rules: Optional[dict] = None,
+                    state_spec: Optional[dict] = None) -> Callable:
     """Fused fine-tuning round: ``steps`` HFSL steps in ONE jitted dispatch.
 
     Returned ``round_fn(state, bank, offset=0) -> (state, metrics)``:
@@ -256,12 +282,39 @@ def make_hfsl_round(cfg, optimizer: Optimizer, loss_fn: Callable, *,
 
     Numerics match ``steps`` sequential :func:`make_hfsl_step` calls on the
     same batches exactly — the two engines share one step body.
+
+    ``mesh`` makes the round mesh-native: the jit's in/out shardings are
+    pinned from rules.partition_specs over ``state_spec`` (the
+    :func:`hfsl_state_spec` tree — required with ``mesh``), so the adapter
+    replicas, optimizer moments, and the bank's batches keep their
+    ``cluster`` dim resident on the (`pod`, `data`) axes across rounds (no
+    per-round resharding, donation reuses the sharded buffers in place),
+    and :func:`~repro.sharding.rules.use_rules` is active inside the
+    dispatch so the loss forward's activation constraints resolve against
+    ``rules`` (default: per-family hfsl_round_rules). Callers must place
+    state and bank to match — :func:`hfsl_state_shardings` /
+    ``BatchBank.pack(mesh=...)`` produce exactly these placements.
     """
     if remat is not None:
         loss_fn = functools.partial(loss_fn, remat=remat)
+    if mesh is not None and state_spec is None:
+        raise ValueError("make_hfsl_round(mesh=...) requires state_spec= "
+                         "(the hfsl_state_spec tree) to derive the pinned "
+                         "jit in/out shardings")
+    rules = rules or (hfsl_round_rules(cfg.family) if mesh is not None
+                      else None)
+    spmd_axes = None
+    if mesh is not None:
+        # the mesh axes the cluster dim actually lands on (post
+        # divisibility): threaded into the cluster vmap as spmd_axis_name
+        n_clusters = state_spec["opt"]["step"].shape[0]
+        cluster_spec = dim_sharding(mesh, n_clusters, "cluster",
+                                    rules=rules).spec
+        ax = cluster_spec[0] if len(cluster_spec) else None
+        spmd_axes = ax if ax is None or isinstance(ax, tuple) else (ax,)
     step = _make_step_body(cfg, optimizer, loss_fn, sync_every=sync_every,
                            clip_norm=clip_norm, always_sync=always_sync,
-                           microbatches=microbatches)
+                           microbatches=microbatches, spmd_axes=spmd_axes)
 
     def round_core(train: dict, backbone, bank: dict, offset
                    ) -> tuple[dict, dict]:
@@ -273,14 +326,30 @@ def make_hfsl_round(cfg, optimizer: Optimizer, loss_fn: Callable, *,
             out, metrics = step({**carry, "backbone": backbone}, batch)
             return {k: out[k] for k in _TRAIN_KEYS}, metrics
 
-        return jax.lax.scan(body, train, jnp.arange(steps, dtype=jnp.int32))
+        with use_rules(mesh, rules):
+            return jax.lax.scan(body, train,
+                                jnp.arange(steps, dtype=jnp.int32))
 
     if jit:
         # donate only the train state (argnum 0): the backbone rides as its
         # own argument precisely so it is excluded from donation — callers
         # keep serving from the same frozen backbone buffers.
-        round_core = jax.jit(round_core,
-                             donate_argnums=(0,) if donate else ())
+        donate_argnums = (0,) if donate else ()
+        if mesh is None:
+            round_core = jax.jit(round_core, donate_argnums=donate_argnums)
+        else:
+            state_sh = named_shardings(state_spec, mesh, rules)
+            train_sh = {k: state_sh[k] for k in _TRAIN_KEYS}
+            # the bank in_sharding is a pytree prefix: one sharding covers
+            # every (steps, cluster, batch, ...) leaf — identical to what
+            # BatchBank.pack(mesh=...) placed
+            bank_sh = dim_sharding(mesh, n_clusters, "cluster", index=1,
+                                   rules=rules)
+            round_core = jax.jit(
+                round_core,
+                in_shardings=(train_sh, state_sh["backbone"], bank_sh, None),
+                out_shardings=(train_sh, None),
+                donate_argnums=donate_argnums)
 
     def round_fn(state: dict, bank: dict, offset=0) -> tuple[dict, dict]:
         train = {k: state[k] for k in _TRAIN_KEYS}

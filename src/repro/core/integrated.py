@@ -83,7 +83,8 @@ class IntegratedRuntime:
                  sync_every: int = 5, serve_batch: int = 64,
                  serve_gen: int = 4, serve_slots: int = 16, lr: float = 5e-3,
                  profit_scale: float = 100.0, upgrade_cost: float = 50.0,
-                 cost_model: Optional[CostModel] = None, seed: int = 0):
+                 cost_model: Optional[CostModel] = None, seed: int = 0,
+                 mesh=None):
         self.cfg = cfg
         self.tasks = tasks                       # domain -> ClassificationTask
         self.n_clusters = n_clusters
@@ -94,25 +95,53 @@ class IntegratedRuntime:
         self.cm = cost_model or CostModel()
         self.serve_batch = serve_batch
         self.serve_gen = serve_gen
+        # mesh-native runtime: with a (`data`, `model`) mesh BOTH sides of
+        # the loop shard — upgrade rounds pin the HFSL state/bank cluster
+        # dims onto `data` (hfsl.make_hfsl_round(mesh=...)), serving shards
+        # engine waves over `data` and the AdapterBank slot dim over `data`
+        # too. Placement happens ONCE here; every dispatch thereafter
+        # consumes mesh-resident buffers.
+        self.mesh = mesh
         key = jax.random.PRNGKey(seed)
         params = M.init(cfg, key)
         self.backbone = params["backbone"]       # shared frozen FM
         self.opt = adamw(lr)
         self.batch = batch
+        round_rules = None
+        state_spec = None
+        state_sh = None
+        if mesh is not None:
+            from repro.sharding import rules as R
+            round_rules = R.hfsl_round_rules(cfg.family)
+            # ONE spec derivation: the same tree places the init-time
+            # state (device_put below) and pins the round's jit in/out
+            # shardings (state_spec= to make_hfsl_round), so the two
+            # cannot desynchronize
+            state_spec = hfsl.hfsl_state_spec(cfg, n_clusters, self.opt,
+                                              M.model_spec)
+            state_sh = R.named_shardings(state_spec, mesh, round_rules)
+            self.backbone = jax.device_put(self.backbone,
+                                           state_sh["backbone"])
         self.domains: dict[str, DomainState] = {}
         self._banks: dict[str, BatchBank] = {}
         for i, name in enumerate(tasks):
             state = hfsl.init_hfsl_state(jax.random.PRNGKey(seed + i), cfg,
                                          n_clusters, self.opt,
                                          lambda c, k: params)
+            if state_sh is not None:             # cluster replicas on `data`
+                state = {**state, **jax.device_put(
+                    {k: state[k] for k in ("adapters_c", "opt", "step")},
+                    {k: state_sh[k] for k in ("adapters_c", "opt", "step")})}
             data = tasks[name].dataset(200 * n_clusters, seed=seed + 11 + i)
             parts = partition_by_classes(data["label"], n_clusters,
                                          cfg.peft.head_dim_out,
                                          seed=seed + i)
             # one epoch of per-cluster batches lives on device for the whole
             # runtime; every upgrade round gathers from it inside the scan
+            # (with a mesh: each cluster's rows on that cluster's slice)
             self._banks[name] = BatchBank.pack(data, parts, batch,
-                                               seed=seed + i)
+                                               seed=seed + i, mesh=mesh,
+                                               rules=round_rules)
             self.domains[name] = DomainState(
                 name, state["adapters_c"], state["opt"], state["step"])
         # ONE jitted dispatch per fine-tuning round (the decode engine's
@@ -121,16 +150,23 @@ class IntegratedRuntime:
         # state wholesale, so the round reuses them for its outputs.
         self._round = hfsl.make_hfsl_round(
             cfg, self.opt, M.classify_loss, steps=self.steps,
-            sync_every=self.sync_every, donate=True)
+            sync_every=self.sync_every, donate=True, mesh=mesh,
+            rules=round_rules, state_spec=state_spec)
         # ONE multi-tenant bank for every domain's serving adapters: waves
         # and classify calls address it with per-row adapter slot ids, so
         # serving never assembles per-domain param trees on the host.
         self.bank = AdapterBank.create(
-            {n: self._consensus_adapters(n) for n in self.domains})
+            {n: self._consensus_adapters(n) for n in self.domains},
+            mesh=mesh)
         self.engine = DecodeEngine(cfg, slots=min(serve_slots, serve_batch),
-                                   seed=seed, bank=self.bank)
-        self._classify = jax.jit(
-            lambda p, b, ids: M.classify(p, b, cfg, adapter_ids=ids))
+                                   seed=seed, bank=self.bank, mesh=mesh)
+
+        def _classify_impl(p, b, ids):
+            from repro.sharding import rules as R
+            with R.use_rules(mesh, R.serving_rules() if mesh else None):
+                return M.classify(p, b, cfg, adapter_ids=ids)
+
+        self._classify = jax.jit(_classify_impl)
         self.records: list[RoundRecord] = []
         self._eval_cache: dict[str, dict] = {
             n: tasks[n].dataset(150, seed=seed + 91 + i)
@@ -298,3 +334,8 @@ class IntegratedRuntime:
 
     def total_profit(self) -> float:
         return self.records[-1].cumulative if self.records else 0.0
+
+
+# The paper names the system GaisNet; the runtime IS the system, so export
+# the name (notably for `GaisNet(mesh=...)`, the mesh-native entry point).
+GaisNet = IntegratedRuntime

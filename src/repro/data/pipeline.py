@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.sharding.rules import dim_sharding
+
 
 def batches(data: dict, batch_size: int, *, shuffle: bool = True,
             seed: int = 0, drop_last: bool = True,
@@ -58,9 +60,23 @@ class BatchBank:
     step index, so a round of K steps touches the host zero times; the
     ``offset`` cursor (see :meth:`advance`) carries epoch position across
     rounds exactly like the legacy iterator would.
+
+    Packed with a ``mesh``, every leaf is placed with its ``cluster`` dim on
+    the mesh's (`pod`, `data`) axes (sharding/rules.py `cluster` rule): each
+    cluster's batches live on the mesh slice that trains that cluster, so
+    the scanned round's per-step gather never moves a batch off its slice.
+    The same placement is what hfsl.make_hfsl_round(mesh=...) pins as its
+    bank in_sharding — pack and round agree by construction.
     """
     arrays: dict
     offset: int = 0
+
+    @staticmethod
+    def shardings(arrays: dict, mesh, rules: Optional[dict] = None):
+        """The bank's NamedSharding tree: cluster dim (axis 1) on `data`."""
+        n_clusters = next(iter(jax.tree.leaves(arrays))).shape[1]
+        sh = dim_sharding(mesh, n_clusters, "cluster", index=1, rules=rules)
+        return jax.tree.map(lambda _: sh, arrays)
 
     @property
     def steps(self) -> int:
@@ -78,11 +94,14 @@ class BatchBank:
 
     @classmethod
     def pack(cls, data: dict, parts: Sequence[np.ndarray], batch_size: int,
-             *, seed: int = 0, steps: Optional[int] = None) -> "BatchBank":
+             *, seed: int = 0, steps: Optional[int] = None,
+             mesh=None, rules: Optional[dict] = None) -> "BatchBank":
         """Pre-pack one epoch of :func:`cluster_batches`-shaped batches.
 
         The epoch length is the smallest cluster's batch count (every row
-        must hold one batch per cluster) unless ``steps`` caps it.
+        must hold one batch per cluster) unless ``steps`` caps it. With a
+        ``mesh``, leaves are placed cluster-sharded over `data` (see class
+        docstring).
         """
         epoch = min(len(p) // batch_size for p in parts)
         if steps is not None:
@@ -92,11 +111,15 @@ class BatchBank:
                 f"smallest cluster has < {batch_size} examples; "
                 "cannot pack a BatchBank row")
         it = cluster_batches(data, parts, batch_size, seed=seed)
-        return cls.from_iterator(it, epoch)
+        return cls.from_iterator(it, epoch, mesh=mesh, rules=rules)
 
     @classmethod
-    def from_iterator(cls, it: Iterator[dict], steps: int) -> "BatchBank":
+    def from_iterator(cls, it: Iterator[dict], steps: int, *,
+                      mesh=None, rules: Optional[dict] = None) -> "BatchBank":
         """Stack ``steps`` batches from any cluster-batch iterator."""
         rows = list(itertools.islice(it, steps))
-        return cls({k: jnp.stack([r[k] for r in rows])
-                    for k in rows[0]})
+        arrays = {k: jnp.stack([r[k] for r in rows]) for k in rows[0]}
+        if mesh is not None:
+            arrays = jax.device_put(arrays,
+                                    cls.shardings(arrays, mesh, rules))
+        return cls(arrays)

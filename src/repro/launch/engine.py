@@ -135,11 +135,18 @@ class DecodeEngine:
     """Packs queued requests into fixed slots and serves them ragged."""
 
     def __init__(self, cfg, *, slots: int = 8, greedy: bool = True,
-                 seed: int = 0, bank=None):
+                 seed: int = 0, bank=None, mesh=None):
         self.cfg = cfg
         self.slots = slots
         self.greedy = greedy
         self.bank = bank                   # Optional[AdapterBank]: multi-tenant
+        # mesh-native waves: every fused dispatch (wave prefill / in-wave
+        # refill / decode segment) traces under rules.serving_rules(), so
+        # the wave batch shards over `data` and head/FF dims over `model`.
+        # Params must already live on the mesh (model.place_params /
+        # AdapterBank(mesh=...)); drains stay token-identical to unsharded
+        # serving (see tests/test_mesh_sharding.py).
+        self.mesh = mesh
         self.slot_table = [Slot() for _ in range(slots)]
         self._queue: deque[Request] = deque()
         self._uid = 0
@@ -260,7 +267,8 @@ class DecodeEngine:
                              **self._stack_extras(
                                  [cur_extras[i] for i in range(B)],
                                  extras_keys, live)}
-                    tok, caches, pos = M._wave_prefill_fn(self.cfg, cap)(
+                    tok, caches, pos = M._wave_prefill_fn(
+                        self.cfg, cap, self.mesh)(
                         wp, batch, jnp.asarray(lens), ids)
                 else:
                     # in-wave refill: prefill ONLY the admitted rows
@@ -283,7 +291,8 @@ class DecodeEngine:
                         rdom = [req.domain for _, req in packed]
                         rdom += [rdom[0]] * (Br - len(packed))
                         ids_rows = self.bank.adapter_ids(rdom)
-                    tok, caches, pos = M._refill_fn(self.cfg, cap)(
+                    tok, caches, pos = M._refill_fn(
+                        self.cfg, cap, self.mesh)(
                         wp, batch, jnp.asarray(lens), jnp.asarray(row_idx),
                         tok, caches, pos, ids_rows)
             # zero-budget admissions complete immediately with empty tokens
@@ -313,7 +322,7 @@ class DecodeEngine:
             if not self.greedy:
                 self._key, key = jax.random.split(self._key)
             toks, tok, caches, pos, _, key = M._segment_fn(
-                self.cfg, seg, self.greedy)(
+                self.cfg, seg, self.greedy, self.mesh)(
                 self._wave_params(params, tenant), tok, caches, pos,
                 jnp.asarray(remaining, jnp.int32), key, ids)
             toks = np.asarray(toks)            # device sync = segment done
@@ -365,6 +374,15 @@ class DecodeEngine:
         if domains is not None and len(domains) != len(prompts):
             raise ValueError(f"domains ({len(domains)}) must name one "
                              f"adapter slot per prompt ({len(prompts)})")
+        # mirror the domains check for extra_batch: a short leading dim
+        # would otherwise fail deep inside per-row indexing (or, worse,
+        # silently truncate a longer one) instead of at the API boundary
+        for k, v in (extra_batch or {}).items():
+            n = np.shape(v)[0] if np.ndim(v) else 0
+            if n != len(prompts):
+                raise ValueError(
+                    f"extra_batch[{k!r}] leading dim ({n}) must carry one "
+                    f"row per prompt ({len(prompts)})")
         uids = [self.submit(p, gen,
                             extras=None if extra_batch is None else
                             {k: np.asarray(v[i]) for k, v in extra_batch.items()},

@@ -15,7 +15,10 @@ from jax.sharding import Mesh
 def _mesh(shape, axes):
     n = int(np.prod(shape))
     devs = jax.devices()
-    assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
+    # a real error, not an assert: a too-small device pool must fail loudly
+    # even under `python -O` (a silently mis-shaped Mesh crashes far later)
+    if len(devs) < n:
+        raise ValueError(f"need {n} devices, have {len(devs)}")
     return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
 
 

@@ -19,7 +19,8 @@ from repro.models.layers import (cross_entropy, embed, embed_spec, rmsnorm,
                                  rmsnorm_spec, unembed)
 from repro.models.transformer import (adapter_stack_spec, cache_group_spec,
                                       stack_decode, stack_seq, stack_spec)
-from repro.sharding.rules import ParamSpec, init_from_spec, shard
+from repro.sharding.rules import (ParamSpec, init_from_spec, serving_rules,
+                                  shard, use_rules)
 
 # ---------------------------------------------------------------------------
 # Specs
@@ -293,19 +294,32 @@ def _prefill_state(params: dict, batch: dict, cfg: ModelConfig, cap: int,
     return tok0, caches, pos0
 
 
+def _wave_rules(mesh):
+    """(mesh, rules) context for the fused serving dispatches.
+
+    With a mesh, every wave/refill/segment jit traces under
+    rules.serving_rules(): the wave batch constrains onto `data`, head/FF
+    dims onto `model` (the shard() calls inside attention/moe/ssm resolve
+    against the active rule set). Without one this is a no-op context —
+    the unsharded path is byte-identical to before.
+    """
+    return use_rules(mesh, serving_rules() if mesh is not None else None)
+
+
 @functools.lru_cache(maxsize=64)
-def _wave_prefill_fn(cfg: ModelConfig, cap: int):
+def _wave_prefill_fn(cfg: ModelConfig, cap: int, mesh=None):
     """Jitted ragged wave prefill: batch + prompt_lens -> decode state."""
 
     def impl(params, batch, prompt_lens, adapter_ids):
-        return _prefill_state(params, batch, cfg, cap, adapter_ids,
-                              prompt_lens)
+        with _wave_rules(mesh):
+            return _prefill_state(params, batch, cfg, cap, adapter_ids,
+                                  prompt_lens)
 
     return jax.jit(impl)
 
 
 @functools.lru_cache(maxsize=64)
-def _refill_fn(cfg: ModelConfig, cap: int):
+def _refill_fn(cfg: ModelConfig, cap: int, mesh=None):
     """Jitted in-wave slot refill: prefill fresh rows INTO a live wave.
 
     ``batch`` holds ONLY the rows being admitted (padded to a pow2 row
@@ -320,22 +334,24 @@ def _refill_fn(cfg: ModelConfig, cap: int):
 
     def impl(params, batch, prompt_lens, row_idx, tok, caches, pos,
              adapter_ids):
-        tok_n, caches_n, pos_n = _prefill_state(params, batch, cfg, cap,
-                                                adapter_ids, prompt_lens)
+        with _wave_rules(mesh):
+            tok_n, caches_n, pos_n = _prefill_state(params, batch, cfg, cap,
+                                                    adapter_ids, prompt_lens)
 
-        def merge(old, new):
-            return old.at[:, row_idx].set(new.astype(old.dtype), mode="drop")
+            def merge(old, new):
+                return old.at[:, row_idx].set(new.astype(old.dtype),
+                                              mode="drop")
 
-        caches = jax.tree.map(merge, caches, caches_n)
-        tok = tok.at[row_idx].set(tok_n, mode="drop")
-        pos = pos.at[row_idx].set(pos_n, mode="drop")
-        return tok, caches, pos
+            caches = jax.tree.map(merge, caches, caches_n)
+            tok = tok.at[row_idx].set(tok_n, mode="drop")
+            pos = pos.at[row_idx].set(pos_n, mode="drop")
+            return tok, caches, pos
 
     return jax.jit(impl)
 
 
 @functools.lru_cache(maxsize=64)
-def _segment_fn(cfg: ModelConfig, steps: int, greedy: bool):
+def _segment_fn(cfg: ModelConfig, steps: int, greedy: bool, mesh=None):
     """Jitted decode segment: ``steps`` scanned steps of a ragged wave.
 
     Segment lengths are powers of two (the engine buckets them), so the
@@ -343,16 +359,17 @@ def _segment_fn(cfg: ModelConfig, steps: int, greedy: bool):
     instead of growing per distinct budget."""
 
     def impl(params, tok, caches, pos, remaining, key, adapter_ids):
-        toks, (tok, caches, pos, remaining, key) = _scan_steps(
-            params, cfg, steps, greedy, tok, caches, pos, remaining, key,
-            adapter_ids)
-        return toks, tok, caches, pos, remaining, key
+        with _wave_rules(mesh):
+            toks, (tok, caches, pos, remaining, key) = _scan_steps(
+                params, cfg, steps, greedy, tok, caches, pos, remaining, key,
+                adapter_ids)
+            return toks, tok, caches, pos, remaining, key
 
     return jax.jit(impl)
 
 
 @functools.lru_cache(maxsize=64)
-def _generate_fn(cfg: ModelConfig, gen: int, greedy: bool):
+def _generate_fn(cfg: ModelConfig, gen: int, greedy: bool, mesh=None):
     """Build + jit the fused prefill-and-scan generator for one config.
 
     The whole request — prefill, ``gen`` decode steps, sampling — is ONE
@@ -365,16 +382,31 @@ def _generate_fn(cfg: ModelConfig, gen: int, greedy: bool):
 
     def impl(params: dict, batch: dict, key: jax.Array,
              adapter_ids, prompt_lens) -> jax.Array:
-        S = batch["tokens"].shape[1]
-        tok0, caches, pos0 = _prefill_state(params, batch, cfg, S + gen,
-                                            adapter_ids, prompt_lens)
-        B = batch["tokens"].shape[0]
-        remaining = jnp.full((B,), gen, jnp.int32)
-        toks, _ = _scan_steps(params, cfg, gen, greedy, tok0, caches, pos0,
-                              remaining, key, adapter_ids)
-        return toks                                        # (B, gen)
+        with _wave_rules(mesh):
+            S = batch["tokens"].shape[1]
+            tok0, caches, pos0 = _prefill_state(params, batch, cfg, S + gen,
+                                                adapter_ids, prompt_lens)
+            B = batch["tokens"].shape[0]
+            remaining = jnp.full((B,), gen, jnp.int32)
+            toks, _ = _scan_steps(params, cfg, gen, greedy, tok0, caches,
+                                  pos0, remaining, key, adapter_ids)
+            return toks                                    # (B, gen)
 
     return jax.jit(impl)
+
+
+def place_params(params: dict, cfg: ModelConfig, mesh,
+                 rules: Optional[dict] = None) -> dict:
+    """device_put a {backbone, adapters} tree onto ``mesh`` per the rule
+    set (default serving_rules): weight dims shard where they divide, the
+    rest replicate. Callers of the mesh-sharded serving path must place
+    params before the first dispatch — jit rejects committed inputs whose
+    placement disagrees with the computation's mesh."""
+    from repro.sharding.rules import named_shardings
+    spec = model_spec(cfg)
+    spec = {k: spec[k] for k in params if k in spec}
+    sh = named_shardings(spec, mesh, rules or serving_rules())
+    return {**params, **jax.device_put({k: params[k] for k in sh}, sh)}
 
 
 def generate_scan(params: dict, cfg: ModelConfig, prompts: jax.Array, *,
@@ -382,7 +414,7 @@ def generate_scan(params: dict, cfg: ModelConfig, prompts: jax.Array, *,
                   greedy: bool = True,
                   key: Optional[jax.Array] = None,
                   adapter_ids: Optional[jax.Array] = None,
-                  prompt_lens=None) -> jax.Array:
+                  prompt_lens=None, mesh=None) -> jax.Array:
     """Single-dispatch generation: prefill + scanned decode in one jit call.
 
     prompts: (B, S) int32. Returns (B, gen) generated tokens. Matches the
@@ -400,6 +432,10 @@ def generate_scan(params: dict, cfg: ModelConfig, prompts: jax.Array, *,
     right-padded to the shared width and row b generates from position
     ``prompt_lens[b]`` — token-for-token equal to serving row b alone with
     its unpadded prompt.
+
+    ``mesh`` traces the dispatch under rules.serving_rules() (batch over
+    `data`, head/FF dims over `model`); params must already be placed on
+    the mesh (:func:`place_params` / AdapterBank(mesh=...)).
     """
     batch = {"tokens": prompts, **(extra_batch or {})}
     if greedy or key is None:
@@ -408,8 +444,8 @@ def generate_scan(params: dict, cfg: ModelConfig, prompts: jax.Array, *,
         jnp.asarray(adapter_ids, jnp.int32)
     lens = None if prompt_lens is None else \
         jnp.asarray(prompt_lens, jnp.int32)
-    return _generate_fn(cfg, int(gen), bool(greedy))(params, batch, key, ids,
-                                                     lens)
+    return _generate_fn(cfg, int(gen), bool(greedy), mesh)(params, batch,
+                                                           key, ids, lens)
 
 
 def decode_step(params: dict, token: jax.Array, caches: dict,

@@ -62,6 +62,7 @@ DEFAULT_RULES: dict[str, Any] = {
     "prefix": None,
     "stage": "model",                 # SL pipeline stage axis (tests use a tiny mesh)
     "frames": None,
+    "slots": ("pod", "data"),         # AdapterBank tenant-slot axis
 }
 
 
@@ -91,6 +92,22 @@ def moe_serving_rules() -> dict[str, Any]:
     return r
 
 
+def serving_rules() -> dict[str, Any]:
+    """Engine-wave serving rules (launch/engine.py mesh-native drains).
+
+    The ragged continuous-batching wave shards its batch (slot) dim over
+    (`pod`, `data`) and head/FF dims over `model`. Unlike DEFAULT_RULES the
+    KV-cache seq dim stays replicated: the wave's per-row cache-slot
+    scatter (`.at[rows, slot].set`) and the in-wave refill row-scatter
+    address single positions along seq — sharding it would turn every
+    decode-step write into a cross-device update. AdapterBank slot dims
+    ride `data` (slot-parallel multi-tenant serving).
+    """
+    r = dict(DEFAULT_RULES)
+    r["kv_seq"] = None
+    return r
+
+
 def train_rules(family: str) -> dict[str, Any]:
     """Per-family training rules (DESIGN.md §4 / EXPERIMENTS.md §Dry-run).
 
@@ -108,6 +125,23 @@ def train_rules(family: str) -> dict[str, Any]:
         r["batch"] = "model"
     else:
         r["seq"] = "model"
+    return r
+
+
+def hfsl_round_rules(family: str) -> dict[str, Any]:
+    """Rules for the EXECUTED fused HFSL round (hfsl.make_hfsl_round).
+
+    Same as :func:`train_rules` minus sequence parallelism: the SP
+    gather/scatter inside the cluster-vmapped value_and_grad miscomputes
+    VALUES (not just layout) under XLA:CPU SPMD on forced-host-device test
+    meshes, and the round's parallelism story is the cluster dim on
+    (`pod`, `data`) — pinned by the round's jit in/out shardings — with
+    tensor parallelism over `model` inside each cluster. Re-enabling SP
+    for real-TPU rounds is a ROADMAP follow-up; the dry-run still lowers
+    the full train_rules SP path.
+    """
+    r = train_rules(family)
+    r["seq"] = None
     return r
 
 
@@ -185,7 +219,12 @@ class ParamSpec:
     scale: float = 0.02
 
     def __post_init__(self):
-        assert len(self.axes) in (0, len(self.shape)), (self.shape, self.axes)
+        # a real error, not an assert: layout declarations are config-file
+        # territory and must fail loudly even under `python -O`
+        if len(self.axes) not in (0, len(self.shape)):
+            raise ValueError(
+                f"ParamSpec axes {self.axes} must be empty or name one "
+                f"logical axis per dim of shape {self.shape}")
 
 
 def _is_spec(x) -> bool:
@@ -261,6 +300,22 @@ def named_shardings(tree, mesh: Mesh, rules: Optional[dict] = None) -> Any:
     return jax.tree.map(lambda p: NamedSharding(mesh, p),
                         partition_specs(tree, mesh, rules),
                         is_leaf=lambda x: isinstance(x, P))
+
+
+def dim_sharding(mesh: Mesh, size: int, logical: str, *, index: int = 0,
+                 rules: Optional[dict] = None) -> NamedSharding:
+    """NamedSharding placing ONE dim (at ``index``) on its logical axis.
+
+    The workhorse for arrays that are not ParamSpec-declared (BatchBank
+    rows, AdapterBank slot stacks): dim ``index`` of size ``size`` goes to
+    the mesh axes ``rules[logical]`` resolves to, every other dim stays
+    replicated. Non-dividing mesh axes are dropped per :func:`fit_spec`
+    (device_put / jit shardings require exact divisibility), so e.g. 3
+    tenant slots on a 2-way `data` axis degrade gracefully to replicated.
+    """
+    p = _resolve((None,) * index + (logical,), rules or DEFAULT_RULES, mesh)
+    p = fit_spec(p, (1,) * index + (int(size),), mesh)
+    return NamedSharding(mesh, p)
 
 
 def param_bytes(tree) -> int:

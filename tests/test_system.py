@@ -62,6 +62,11 @@ def test_trainable_fraction_below_one_percent(system):
     assert trainable_fraction(params) < 0.02      # reduced model; full: <1%
 
 
+# 60 legacy one-dispatch-per-step HFSL steps (~40s): the convergence signal
+# rides tier-1 via test_integrated::test_upgrade_improves_accuracy (fused
+# round engine) and the FedAvg sync property via test_core::TestHFSL, so
+# this exhaustive legacy-engine run is `slow`
+@pytest.mark.slow
 def test_hfsl_finetune_beats_chance_and_syncs(system):
     cfg, task, params, _, _ = system
     data = task.dataset(400, seed=1)
