@@ -1,0 +1,108 @@
+"""Chaos benchmark: graceful degradation of the virtuous cycle vs fault rate.
+
+Sweeps a seeded FaultPlan (core/faults.py) across the integrated runtime
+and the knowledge relay and reports HOW the system degrades — the claim
+under test is *graceful*: every round completes at every fault rate, the
+bank never serves a non-finite adapter, and the only casualties are
+accuracy (fewer effective cluster-updates per round) and wire bytes
+(retransmissions):
+
+- ``chaos_round@<rate>`` — one mixed produce/upgrade demand under
+  ``dropout=rate, grad_nan=rate/2``: derived reports the end accuracy,
+  serving tok/s, and the dropped/skipped cluster-update counts.
+- ``chaos_relay@<rate>`` — relay round-trips over a ``link_loss=rate``
+  backhaul: derived reports the retransmit overhead (wire bytes / logical
+  bytes) and retries per transfer.
+
+Emits ``name,us_per_call,derived`` rows (benchmarks/common.emit).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import edge_cfg, emit
+from repro.core.faults import FaultPlan
+from repro.core.integrated import IntegratedRuntime
+from repro.core.relay import KnowledgeRelay
+from repro.data.synthetic import ClassificationTask
+from repro.models import model as M
+
+DROPOUT_SWEEP = (0.0, 0.25, 0.5)
+LINK_SWEEP = (0.0, 0.2, 0.4)
+
+
+def _runtime(cfg, faults):
+    tasks = {n: ClassificationTask(cfg.peft.head_dim_out, cfg.vocab_size,
+                                   16, class_strength=0.6, seed=i)
+             for i, n in enumerate(["nlp", "cv"])}
+    return IntegratedRuntime(cfg, tasks, n_clusters=4, steps_per_upgrade=4,
+                             batch=4, sync_every=2, serve_batch=8,
+                             serve_gen=2, serve_slots=4, seed=0,
+                             faults=faults)
+
+
+def bench_rounds(cfg, rounds: int) -> None:
+    # alternate upgrades across both domains, then produce (forces the
+    # masked-round path every sweep — the default policy would only serve)
+    demand = ["nlp", "cv"] * (rounds // 2)
+    policy = lambda r, levels: r % 2 if r < rounds - 2 else 2
+    for rate in DROPOUT_SWEEP:
+        plan = FaultPlan(seed=7, dropout=rate, grad_nan=rate / 2) \
+            if rate else None
+        rt = _runtime(cfg, plan)
+        t0 = time.time()
+        recs = rt.run(demand, policy=policy)
+        dt = time.time() - t0
+        assert len(recs) == len(demand)              # every round completed
+        for x in jax.tree.leaves(rt.bank.stacked):   # never serves non-finite
+            assert np.isfinite(np.asarray(x, np.float32)).all()
+        acc = float(np.mean([rt.domains[n].accuracy for n in rt.domains]))
+        serve = [r.cost for r in recs if r.action == "produce"]
+        tok_s = sum(c.tokens for c in serve) / max(
+            sum(c.latency_s for c in serve), 1e-9)
+        dropped = sum(r.cost.dropped_clusters for r in recs)
+        skipped = sum(r.cost.skipped_updates for r in recs)
+        emit(f"chaos_round@{rate:g}", dt / len(demand) * 1e6,
+             f"acc={acc:.3f};tok_per_s={tok_s:.1f};"
+             f"dropped={dropped};skipped={skipped}")
+
+
+def bench_relay(cfg, trips: int) -> None:
+    adapters = M.init(cfg, jax.random.PRNGKey(0))["adapters"]
+    for rate in LINK_SWEEP:
+        plan = FaultPlan(seed=11, link_loss=rate) if rate else None
+        r = KnowledgeRelay(adapters, ["nlp", "cv"], faults=plan,
+                           max_retries=50, backoff_s=0.0)
+        ups = [jax.tree.map(lambda x: x + i, adapters) for i in range(2)]
+        t0 = time.time()
+        for _ in range(trips):
+            r.cloud_deliver("nlp")
+            r.edge_absorb("nlp", ups)
+            r.cloud_aggregate()
+        dt = time.time() - t0
+        logical = r.ledger.total() - r.ledger.retransmit_bytes
+        emit(f"chaos_relay@{rate:g}", dt / trips * 1e6,
+             f"overhead={r.ledger.total() / max(logical, 1):.3f};"
+             f"retries_per_transfer="
+             f"{r.ledger.retries / max(r.ledger.transfers, 1):.3f}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--trips", type=int, default=5)
+    # benchmarks/run.py imports main() with argv=None -> defaults (it must
+    # not see run.py's own CLI args); direct runs pass sys.argv[1:] below.
+    args = ap.parse_args([] if argv is None else argv)
+    cfg = edge_cfg()
+    bench_rounds(cfg, args.rounds)
+    bench_relay(cfg, args.trips)
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

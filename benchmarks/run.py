@@ -12,6 +12,7 @@ import traceback
 
 ALL = ["table5_scheduler", "fig2_comm", "kernels_bench", "decode_bench",
        "serve_bench", "ragged_bench", "finetune_bench", "shard_bench",
+       "chaos_bench",
        "fig6_pretraining", "fig7_peft", "table3_noniid", "table4_clusters",
        "roofline_report"]
 

@@ -95,6 +95,50 @@ print("[ci] interpret-mode kernel smoke OK "
       "+ multi-lora gathered fwd)")
 PY
 
+# Chaos smoke: a FaultPlan-driven integrated round (dropout + NaN-poisoned
+# cluster updates) must complete with a finite serving bank, and a forced
+# bad publish must be refused at the bank door with last-known-good
+# rollback restoring the slot bitwise (the full sweep: tests/test_faults.py,
+# `pytest -m chaos`).
+python - <<'PY'
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import get_config
+from repro.core.faults import FaultPlan
+from repro.core.integrated import IntegratedRuntime
+from repro.data.synthetic import ClassificationTask
+
+cfg = get_config("vit-edge").reduced().with_(dtype="float32", vocab_size=64)
+cfg = cfg.with_(peft=dataclasses.replace(cfg.peft, head_dim_out=5))
+tasks = {n: ClassificationTask(5, 64, 16, seed=i)
+         for i, n in enumerate(["nlp", "cv"])}
+plan = FaultPlan(seed=3, dropout=0.4, grad_nan=0.4)
+rt = IntegratedRuntime(cfg, tasks, n_clusters=4, steps_per_upgrade=4,
+                       batch=4, sync_every=2, serve_batch=8, serve_gen=2,
+                       serve_slots=4, seed=0, faults=plan)
+recs = rt.run(["nlp", "cv", "nlp"], policy=lambda r, lv: r % 2 if r < 2 else 2)
+assert len(recs) == 3, recs
+ups = [r for r in recs if r.action == "upgrade"]
+assert sum(r.cost.dropped_clusters + r.cost.skipped_updates
+           for r in ups) > 0, "chaos plan never fired"
+for x in jax.tree.leaves(rt.bank.stacked):
+    assert np.isfinite(np.asarray(x, np.float32)).all(), "bank went non-finite"
+
+good = rt.bank.snapshot("nlp")
+try:
+    rt.bank.publish("nlp", jax.tree.map(lambda x: x * jnp.nan, good))
+    raise SystemExit("poisoned publish was accepted")
+except ValueError:
+    pass
+rt.bank.publish("nlp", jax.tree.map(lambda x: x + 1.0, good))
+rt.bank.rollback("nlp")
+for g, w in zip(jax.tree.leaves(rt.bank.snapshot("nlp")),
+                jax.tree.leaves(good)):
+    np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+print("[ci] chaos smoke OK (masked round completed finite; "
+      "bad publish refused; LKG rollback bitwise)")
+PY
+
 # Host-device mesh smoke: benchmarks/shard_bench.py spawns a forced
 # 4-host-device ('data','model') mesh subprocess, hard-asserts that the
 # sharded engine drain is token-identical and the sharded HFSL round is

@@ -11,6 +11,7 @@ from __future__ import annotations
 import io
 import json
 import os
+import tempfile
 from typing import Any, Optional
 
 import jax
@@ -18,6 +19,25 @@ import jax.numpy as jnp
 import numpy as np
 
 _SEP = "/"
+
+
+def _atomic_savez(path: str, flat: dict) -> int:
+    """Crash-safe npz write: savez to a temp file in the target directory,
+    then ``os.replace`` into place — a crash mid-save leaves the previous
+    checkpoint intact (readers only ever see a complete file). Returns
+    bytes written."""
+    d = os.path.dirname(path) or "."
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as fh:
+            np.savez(fh, **flat)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    return os.path.getsize(path)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -41,12 +61,11 @@ def _part(p) -> str:
 
 
 def save(path: str, tree) -> int:
-    """Save a pytree of arrays. Returns bytes written."""
+    """Save a pytree of arrays (atomically). Returns bytes written."""
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
-    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
     f = path if path.endswith(".npz") else path + ".npz"
-    return os.path.getsize(f)
+    return _atomic_savez(f, flat)
 
 
 def load(path: str, like: Optional[Any] = None):
@@ -72,7 +91,8 @@ def load(path: str, like: Optional[Any] = None):
     leaves = []
     for path, leaf in leaves_like:
         key = _SEP.join(_part(p) for p in path)
-        assert key in arrays, f"missing {key} in checkpoint"
+        if key not in arrays:
+            raise KeyError(f"missing {key} in checkpoint")
         leaves.append(arrays[key].astype(leaf.dtype).reshape(leaf.shape))
     return jax.tree.unflatten(jax.tree.structure(like), leaves)
 
@@ -121,8 +141,7 @@ def save_adapters_quantized(path: str, params: dict) -> int:
         flat[key + ".dtype"] = np.frombuffer(
             str(jnp.dtype(leaf.dtype)).encode().ljust(16), np.uint8).copy()
     f = path if path.endswith(".npz") else path + ".npz"
-    np.savez(f, **flat)
-    return os.path.getsize(f)
+    return _atomic_savez(f, flat)
 
 
 def load_adapters_quantized(path: str, params: dict) -> dict:

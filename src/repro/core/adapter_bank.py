@@ -33,6 +33,7 @@ hot-swaps (no creeping resharding round over round).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Iterable, Optional, Sequence
 
 import jax
@@ -84,6 +85,15 @@ _publish_jit = jax.jit(_publish, donate_argnums=(0,))
 _snapshot_jit = jax.jit(_snapshot)
 
 
+@jax.jit
+def _all_finite(tree) -> jax.Array:
+    """Scalar bool: every leaf of ``tree`` is finite (publish validation)."""
+    return functools.reduce(
+        jnp.logical_and,
+        [jnp.all(jnp.isfinite(x.astype(jnp.float32)))
+         for x in jax.tree.leaves(tree)])
+
+
 class AdapterBank:
     """Stacked per-domain adapter store with slot-indexed publish/serve."""
 
@@ -100,6 +110,12 @@ class AdapterBank:
                                         out_shardings=sh)
         self.stacked = stacked
         self.versions: Dict[str, int] = {d: 0 for d in self.domains}
+        # last-known-good serving copies: per-domain snapshot of the slot
+        # as it was BEFORE the most recent validated publish, so a poisoned
+        # round can be rolled back without ever re-validating old state
+        self._lkg: Dict[str, dict] = {}
+        self._lkg_version: Dict[str, int] = {}
+        self.rollbacks: Dict[str, int] = {d: 0 for d in self.domains}
 
     @staticmethod
     def shardings(stacked: dict, mesh, rules: Optional[dict] = None):
@@ -146,16 +162,79 @@ class AdapterBank:
         return self.versions[domain]
 
     # -- publish / acquire --------------------------------------------------
-    def publish(self, domain: str, adapters: dict) -> None:
+    def validate(self, domain: str, adapters: dict) -> None:
+        """Reject a payload that must never reach live traffic: wrong tree
+        structure, wrong per-leaf shape (vs the slot it would overwrite),
+        or any non-finite value. Raises ``ValueError``; a passing payload
+        returns silently. One device reduction for finiteness — no per-leaf
+        host sync."""
+        slot = self.slot(domain)           # KeyError on unknown domain
+        del slot
+        for key in self.stacked:
+            if key not in adapters:
+                raise ValueError(
+                    f"publish({domain!r}): payload missing subtree {key!r}")
+            axis = _slot_axis(key)
+            cur_leaves = jax.tree.leaves(self.stacked[key])
+            new_leaves = jax.tree.leaves(adapters[key])
+            if len(cur_leaves) != len(new_leaves):
+                raise ValueError(
+                    f"publish({domain!r}): payload subtree {key!r} has "
+                    f"{len(new_leaves)} leaves, slot has {len(cur_leaves)}")
+            for cur, new in zip(cur_leaves, new_leaves):
+                want = cur.shape[:axis] + cur.shape[axis + 1:]
+                if tuple(new.shape) != tuple(want):
+                    raise ValueError(
+                        f"publish({domain!r}): leaf shape {tuple(new.shape)} "
+                        f"!= slot shape {tuple(want)} in subtree {key!r}")
+        if not bool(_all_finite(adapters)):
+            raise ValueError(
+                f"publish({domain!r}): payload contains non-finite values")
+
+    def publish(self, domain: str, adapters: dict, *,
+                validate: bool = True) -> None:
         """Hot-swap one domain's adapters in place (jitted, DONATED update
         at the slot — the resident bank buffers are reused, never copied;
         the next wave that reads :attr:`stacked` serves the new version —
         no stale reads across waves). Holding a pre-publish reference to
         ``stacked`` and using it after the publish is an error (the buffer
-        is donated); re-read the attribute per dispatch."""
+        is donated); re-read the attribute per dispatch.
+
+        With ``validate`` (the default), the payload is checked first
+        (:meth:`validate`) and the outgoing slot contents are kept as the
+        domain's last-known-good — :meth:`rollback` restores them if the
+        new version turns out bad downstream. A rejected publish raises
+        ``ValueError`` and leaves the bank serving the current version."""
+        if validate:
+            self.validate(domain, adapters)
+            # snapshot BEFORE the donating publish: _snapshot_jit returns
+            # fresh buffers, so the LKG copy survives the donation
+            self._lkg[domain] = self.snapshot(domain)
+            self._lkg_version[domain] = self.versions[domain]
         slot = jnp.asarray(self.slot(domain), jnp.int32)
         self.stacked = self._publish_jit(self.stacked, adapters, slot)
         self.versions[domain] += 1
+
+    def rollback(self, domain: str) -> int:
+        """Re-publish the domain's last-known-good adapters (the slot
+        contents before its most recent validated publish). Returns the
+        version the slot is rolled back TO; raises ``ValueError`` if the
+        domain has never had a validated publish. Idempotent: the LKG copy
+        survives the rollback, so repeated calls republish the same state."""
+        if domain not in self._lkg:
+            raise ValueError(
+                f"rollback({domain!r}): no last-known-good recorded "
+                "(no validated publish yet)")
+        # LKG was already validated when it served; publish it unvalidated
+        # so rollback can't itself be rejected
+        self.publish(domain, self._lkg[domain], validate=False)
+        self.rollbacks[domain] += 1
+        return self._lkg_version[domain]
+
+    def last_known_good_version(self, domain: str) -> Optional[int]:
+        """Version number of the stored LKG copy (None before any
+        validated publish)."""
+        return self._lkg_version.get(domain)
 
     def snapshot(self, domain: str) -> dict:
         """Slice one domain's adapter tree out of the bank (training-side

@@ -65,7 +65,16 @@ class RoundCost:
     priced on, not the served-token rate. ``examples`` mirrors ``tokens``
     for the fine-tuning service: training examples consumed during the
     round (0 for serving rounds), yielding the measured fine-tuning
-    throughput (:attr:`ex_per_s`)."""
+    throughput (:attr:`ex_per_s`).
+
+    The fault-tolerance counters ledger how much of the round degraded
+    instead of failing (core/faults.py): ``dropped_clusters`` counts
+    cluster-rounds lost to dropout/stragglers, ``skipped_updates`` counts
+    in-scan non-finite cluster updates the masked round guarded out,
+    ``retries``/``retransmit_bytes`` meter lossy-relay retransmissions
+    (``comm_bytes`` includes every attempt's bytes on the wire;
+    ``retransmit_bytes`` is the share beyond the first attempt), and
+    ``timed_out`` counts requests the engine retired at their deadline."""
     latency_s: float
     compute_flops: float
     energy_j: float
@@ -74,6 +83,11 @@ class RoundCost:
     tokens: int = 0
     examples: int = 0
     padded_tokens: int = 0
+    dropped_clusters: int = 0
+    skipped_updates: int = 0
+    retries: int = 0
+    retransmit_bytes: int = 0
+    timed_out: int = 0
 
     @property
     def tok_per_s(self) -> float:
@@ -97,7 +111,12 @@ class RoundCost:
                          max(self.memory_bytes, o.memory_bytes),
                          self.tokens + o.tokens,
                          self.examples + o.examples,
-                         self.padded_tokens + o.padded_tokens)
+                         self.padded_tokens + o.padded_tokens,
+                         self.dropped_clusters + o.dropped_clusters,
+                         self.skipped_updates + o.skipped_updates,
+                         self.retries + o.retries,
+                         self.retransmit_bytes + o.retransmit_bytes,
+                         self.timed_out + o.timed_out)
 
 
 def sl_round_cost(trace: SLTrace, cm: CostModel, *,

@@ -1,0 +1,143 @@
+"""Seeded fault injection for the virtuous cycle (the chaos layer).
+
+GaisNet's premise is fragmented edge compute over wireless links — a world
+defined by dropout, stragglers, and lossy backhaul, not by the all-clusters
+-always-survive assumption the happy path makes. This module is the single
+source of truth for *when* things fail; every layer consumes it:
+
+- **HFSL rounds** (core/hfsl.py): a per-round per-cluster participation
+  mask (dropout + stragglers) threads through ``make_hfsl_round``'s scan —
+  masked FedAvg aggregates only surviving clusters — and a per-cluster
+  gradient-corruption mask drives the in-scan non-finite guard.
+- **Knowledge relay** (core/relay.py): per-attempt link drops and in-flight
+  payload corruption; the relay retries with capped exponential backoff and
+  a CRC32 payload checksum rejects corrupted adapter deliveries.
+- **Serving** (core/adapter_bank.py, launch/engine.py): publish validation
+  + last-known-good rollback, per-request deadlines.
+
+Every schedule is a pure function of ``(seed, coordinates)`` via
+``np.random.SeedSequence``, so a plan replays the SAME faults regardless of
+call order or how many other draws happened in between — chaos tests and
+benchmarks are exactly reproducible. A default-constructed plan is all-off
+(``active`` is False) and injects nothing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Tuple
+
+import jax
+import numpy as np
+
+# schedule namespaces (SeedSequence entropy words) — one per fault kind so
+# e.g. the dropout draw for round r never aliases the straggler draw
+_DROP, _STRAGGLE, _CORRUPT, _LINK, _PAYLOAD, _FLIP = range(6)
+
+_RATES = ("dropout", "straggler", "grad_nan", "link_loss", "payload_corrupt")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic, replayable fault schedule.
+
+    Rates are per-event probabilities: ``dropout``/``straggler``/``grad_nan``
+    per (round, cluster); ``link_loss``/``payload_corrupt`` per (transfer,
+    attempt). All must be in ``[0, 1)`` — a rate of 1.0 would make lossy
+    transfers unterminating.
+    """
+    seed: int = 0
+    dropout: float = 0.0          # P(cluster absent for a whole round)
+    straggler: float = 0.0        # P(cluster misses the round's sync deadline)
+    grad_nan: float = 0.0         # P(cluster's round updates go non-finite)
+    link_loss: float = 0.0        # P(one relay transfer attempt is dropped)
+    payload_corrupt: float = 0.0  # P(a delivered payload is bit-corrupted)
+
+    def __post_init__(self):
+        for f in _RATES:
+            v = getattr(self, f)
+            if not 0.0 <= v < 1.0:
+                raise ValueError(f"FaultPlan.{f}={v} must be in [0, 1)")
+
+    @property
+    def active(self) -> bool:
+        """False for the all-off plan — consumers take the exact happy path
+        (bitwise-identical to running with no plan at all)."""
+        return any(getattr(self, f) > 0.0 for f in _RATES)
+
+    def _rng(self, *coords: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence((self.seed, *map(int, coords))))
+
+    # -- HFSL round schedules ------------------------------------------------
+    def participation(self, round_idx: int, n_clusters: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-cluster presence for one round.
+
+        Returns ``(mask, dropped, stragglers)`` — bool ``(n_clusters,)``
+        arrays; ``mask`` True means the cluster trains and syncs this round.
+        Stragglers are clusters that *would* have trained but miss the sync
+        deadline — for a synchronous round both are excluded the same way
+        (their state carries forward untouched), but they are reported
+        separately so staleness-weighting policies can treat them
+        differently later.
+        """
+        dropped = self._rng(_DROP, round_idx).random(n_clusters) < self.dropout
+        stragglers = (self._rng(_STRAGGLE, round_idx).random(n_clusters)
+                      < self.straggler) & ~dropped
+        return ~(dropped | stragglers), dropped, stragglers
+
+    def corrupt_mask(self, round_idx: int, n_clusters: int) -> np.ndarray:
+        """Which clusters' updates get NaN-poisoned this round (bool (n,));
+        drives hfsl's in-scan non-finite guard end-to-end."""
+        return (self._rng(_CORRUPT, round_idx).random(n_clusters)
+                < self.grad_nan)
+
+    # -- relay link schedules ------------------------------------------------
+    def link_drops(self, transfer_id: int, attempt: int) -> bool:
+        """True if this (transfer, attempt) is lost on the wire."""
+        return (self.link_loss > 0.0
+                and self._rng(_LINK, transfer_id, attempt).random()
+                < self.link_loss)
+
+    def payload_corrupted(self, transfer_id: int, attempt: int) -> bool:
+        """True if this attempt arrives but bit-corrupted (checksum bait)."""
+        return (self.payload_corrupt > 0.0
+                and self._rng(_PAYLOAD, transfer_id, attempt).random()
+                < self.payload_corrupt)
+
+    def corrupt_payload(self, tree, transfer_id: int, attempt: int):
+        """The wire copy of ``tree`` with one byte of one leaf flipped —
+        what a corrupted delivery actually hands the receiver. The XOR is
+        guaranteed to change the byte, so :func:`payload_checksum` always
+        catches it (the point is exercising the real checksum compare, not
+        simulating its verdict)."""
+        leaves, treedef = jax.tree.flatten(tree)
+        r = self._rng(_FLIP, transfer_id, attempt)
+        i = int(r.integers(len(leaves)))
+        # np.array COPIES: device_get returns a read-only view of the jax
+        # buffer, and the wire copy must be writable (and must not alias
+        # the sender's live adapters)
+        wire = np.array(jax.device_get(leaves[i]))
+        buf = wire.view(np.uint8).reshape(-1)
+        buf[int(r.integers(buf.size))] ^= 0xFF
+        leaves = list(leaves)
+        leaves[i] = wire
+        return jax.tree.unflatten(treedef, leaves)
+
+
+def payload_checksum(tree) -> int:
+    """CRC32 over a pytree's structure, dtypes, shapes, and raw bytes —
+    the relay's end-to-end wire check for adapter deliveries."""
+    leaves, treedef = jax.tree.flatten(tree)
+    c = zlib.crc32(repr(treedef).encode())
+    for x in leaves:
+        a = np.ascontiguousarray(np.asarray(jax.device_get(x)))
+        c = zlib.crc32(str(a.dtype).encode(), c)
+        c = zlib.crc32(np.asarray(a.shape, np.int64).tobytes(), c)
+        c = zlib.crc32(a.tobytes(), c)
+    return c
+
+
+# The canonical all-off plan: schedules exist, nothing ever fires.
+NO_FAULTS = FaultPlan()

@@ -36,6 +36,7 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 from repro.sharding.rules import (ParamSpec, dim_sharding, hfsl_round_rules,
@@ -140,9 +141,7 @@ def _make_cluster_update(cfg, optimizer: Optimizer, loss_fn: Callable,
 
     def one_cluster(backbone, adapters, opt_state, batch):
         def inner(a, mb):
-            loss, aux = loss_fn({"backbone": backbone, "adapters": a},
-                                mb, cfg)
-            return loss, aux
+            return loss_fn({"backbone": backbone, "adapters": a}, mb, cfg)
 
         vg = jax.value_and_grad(inner, has_aux=True)
         if microbatches <= 1:
@@ -185,33 +184,86 @@ def _make_cluster_update(cfg, optimizer: Optimizer, loss_fn: Callable,
     return one_cluster
 
 
+def fedavg_masked(adapters_c, mask):
+    """Partial-participation FedAvg: mean over the clusters ``mask`` keeps,
+    broadcast back to those clusters ONLY — a masked-out (dropped or
+    straggling) cluster's replica passes through bit-unchanged. With an
+    all-ones mask this is bitwise :func:`fedavg`: the weighted sum·/cnt
+    form compiles to (ulp-level) different arithmetic than ``jnp.mean``
+    once fused into a round's scan, so the full-participation case runtime-
+    selects the plain-mean graph instead of trusting float identities."""
+    m = mask.astype(jnp.float32)
+    cnt = jnp.maximum(jnp.sum(m), 1.0)      # 0 survivors -> no-op round
+    full = jnp.all(m > 0)
+
+    def f(x):
+        mm = m.reshape((-1,) + (1,) * (x.ndim - 1))
+        xf = x.astype(jnp.float32)
+        plain = jnp.mean(xf, axis=0, keepdims=True)
+        masked = jnp.sum(xf * mm, axis=0, keepdims=True) / cnt
+        avg = jnp.broadcast_to(jnp.where(full, plain, masked),
+                               x.shape).astype(x.dtype)
+        return jnp.where(mm > 0, avg, x)
+
+    return jax.tree.map(f, adapters_c)
+
+
+def _clusters_finite(tree) -> jax.Array:
+    """Per-cluster all-leaves-finite flag (n_clusters,) for cluster-leading
+    trees — the in-scan guard's verdict on each cluster's update."""
+    oks = [jnp.all(jnp.isfinite(x.astype(jnp.float32))
+                   .reshape(x.shape[0], -1), axis=1)
+           for x in jax.tree.leaves(tree)]
+    return functools.reduce(jnp.logical_and, oks)
+
+
 def _sync_at_boundary(adapters_c, new_step, *, sync_every: int,
-                      always_sync: bool):
-    """FedAvg at ``sync_every`` multiples of the (possibly traced) counter."""
+                      always_sync: bool, mask=None):
+    """FedAvg at ``sync_every`` multiples of the (possibly traced) counter.
+    With ``mask`` (participation, (n,)), the masked FedAvg aggregates only
+    surviving clusters and leaves the rest untouched."""
+    avg = fedavg if mask is None else functools.partial(fedavg_masked,
+                                                        mask=mask)
     if always_sync or sync_every == 1:
-        return fedavg(adapters_c)
+        return avg(adapters_c)
     do_sync = (new_step % sync_every) == 0
-    synced = fedavg(adapters_c)
+    synced = avg(adapters_c)
     return jax.tree.map(
         lambda s, a: jnp.where(do_sync, s, a), synced, adapters_c)
 
 
 def _make_step_body(cfg, optimizer: Optimizer, loss_fn: Callable, *,
                     sync_every: int, clip_norm: float, always_sync: bool,
-                    microbatches: int, spmd_axes=None) -> Callable:
+                    microbatches: int, spmd_axes=None,
+                    faulted: bool = False) -> Callable:
     """``spmd_axes`` names the mesh axes carrying the cluster dim (mesh-
     native rounds): the cluster vmap runs with ``spmd_axis_name`` so the
     activation shard() constraints inside the per-cluster forward stay
     aligned — vmap inserts the mapped cluster dim into every inner spec
-    instead of letting it shift the constraint onto the wrong dims."""
+    instead of letting it shift the constraint onto the wrong dims.
+
+    ``faulted=True`` returns the fault-tolerant step body
+    ``step(state, batch, mask, corrupt)`` instead: a per-cluster
+    participation ``mask`` (float (n,), >0 = present) gates both the local
+    update and the FedAvg, a per-cluster ``corrupt`` flag NaN-poisons that
+    cluster's computed update (core/faults.py), and an in-scan non-finite
+    guard ``jnp.where``-skips any cluster whose update went NaN/inf — no
+    host sync; the skip just keeps the pre-step replica. The differentiated
+    per-cluster step is the SAME graph as the plain body (corruption is
+    injected into the update epilogue, never into the grad computation), so
+    with an all-ones mask and all-false corrupt the outputs are bitwise
+    identical to the plain body (every guard reduces to a select of the
+    updated branch)."""
     one_cluster = _make_cluster_update(cfg, optimizer, loss_fn, clip_norm,
                                        microbatches)
 
-    def step(state: dict, batch: dict) -> tuple[dict, dict]:
-        adapters_c, opt_c, loss_c, aux_c = jax.vmap(
-            one_cluster, in_axes=(None, 0, 0, 0),
-            spmd_axis_name=spmd_axes)(
+    def vstep(state, batch):
+        return jax.vmap(one_cluster, in_axes=(None, 0, 0, 0),
+                        spmd_axis_name=spmd_axes)(
             state["backbone"], state["adapters_c"], state["opt"], batch)
+
+    def step(state: dict, batch: dict) -> tuple[dict, dict]:
+        adapters_c, opt_c, loss_c, aux_c = vstep(state, batch)
         new_step = state["step"] + 1
         adapters_c = _sync_at_boundary(adapters_c, new_step,
                                        sync_every=sync_every,
@@ -222,7 +274,60 @@ def _make_step_body(cfg, optimizer: Optimizer, loss_fn: Callable, *,
         return {**state, "adapters_c": adapters_c, "opt": opt_c,
                 "step": new_step}, metrics
 
-    return step
+    def step_faulted(state: dict, batch: dict, mask, corrupt
+                     ) -> tuple[dict, dict]:
+        new_a, new_opt, loss_c, aux_c = vstep(state, batch)
+        # gradient-corruption injection: a flagged cluster's update (and
+        # loss) is NaN-poisoned AFTER the differentiated step, so the
+        # unflagged clusters run the plain body's exact graph while the
+        # guard below sees a genuinely non-finite update
+        new_a = jax.tree.map(
+            lambda x: jnp.where(
+                corrupt.reshape((-1,) + (1,) * (x.ndim - 1)),
+                jnp.asarray(jnp.nan, x.dtype), x)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, new_a)
+        loss_c = jnp.where(corrupt, jnp.asarray(jnp.nan, loss_c.dtype),
+                           loss_c)
+        part = mask > 0
+        # non-finite guard: a cluster whose update (or loss) went NaN/inf
+        # keeps its pre-step replica — computed in-scan, surfaced as counts
+        ok = (_clusters_finite(new_a) & _clusters_finite(new_opt)
+              & jnp.isfinite(loss_c))
+        eff = part & ok
+
+        def sel(new, old):
+            return jax.tree.map(
+                lambda n, o: jnp.where(
+                    eff.reshape((-1,) + (1,) * (n.ndim - 1)), n, o), new, old)
+
+        adapters_c = sel(new_a, state["adapters_c"])
+        opt_c = sel(new_opt, state["opt"])
+        new_step = state["step"] + 1
+        adapters_c = _sync_at_boundary(adapters_c, new_step,
+                                       sync_every=sync_every,
+                                       always_sync=always_sync,
+                                       mask=part.astype(jnp.float32))
+        # metric means use where-masking (not multiply): a guarded cluster's
+        # loss is literally NaN, and NaN * 0 would poison the mean. The
+        # all-effective case selects the plain jnp.mean graph so fault-free
+        # metrics match the plain body bitwise (same trick as fedavg_masked)
+        denom = jnp.maximum(jnp.sum(eff.astype(jnp.float32)), 1.0)
+        all_eff = jnp.all(eff)
+        mmean = lambda v: jnp.where(
+            all_eff, jnp.mean(v), jnp.sum(jnp.where(eff, v, 0.0)) / denom)
+        n = part.shape[0]
+        metrics = {"loss": mmean(loss_c),
+                   "loss_per_cluster": loss_c,
+                   "participating": jnp.sum(part.astype(jnp.int32)),
+                   "skipped": jnp.sum((part & ~ok).astype(jnp.int32)),
+                   "dropped": jnp.asarray(n, jnp.int32)
+                   - jnp.sum(part.astype(jnp.int32))}
+        for k in (aux_c or {}):
+            metrics[k] = mmean(aux_c[k])
+        return {**state, "adapters_c": adapters_c, "opt": opt_c,
+                "step": new_step}, metrics
+
+    return step_faulted if faulted else step
 
 
 def make_hfsl_step(cfg, optimizer: Optimizer, loss_fn: Callable, *,
@@ -312,48 +417,77 @@ def make_hfsl_round(cfg, optimizer: Optimizer, loss_fn: Callable, *,
                                     rules=rules).spec
         ax = cluster_spec[0] if len(cluster_spec) else None
         spmd_axes = ax if ax is None or isinstance(ax, tuple) else (ax,)
-    step = _make_step_body(cfg, optimizer, loss_fn, sync_every=sync_every,
-                           clip_norm=clip_norm, always_sync=always_sync,
-                           microbatches=microbatches, spmd_axes=spmd_axes)
+    def build_core(faulted: bool) -> Callable:
+        step = _make_step_body(cfg, optimizer, loss_fn,
+                               sync_every=sync_every, clip_norm=clip_norm,
+                               always_sync=always_sync,
+                               microbatches=microbatches,
+                               spmd_axes=spmd_axes, faulted=faulted)
 
-    def round_core(train: dict, backbone, bank: dict, offset
-                   ) -> tuple[dict, dict]:
-        epoch = jax.tree.leaves(bank)[0].shape[0]
-        off = jnp.asarray(offset, jnp.int32)
+        def round_core(train: dict, backbone, bank: dict, offset,
+                       mask=None, corrupt=None) -> tuple[dict, dict]:
+            epoch = jax.tree.leaves(bank)[0].shape[0]
+            off = jnp.asarray(offset, jnp.int32)
 
-        def body(carry, i):
-            batch = jax.tree.map(lambda x: x[(off + i) % epoch], bank)
-            out, metrics = step({**carry, "backbone": backbone}, batch)
-            return {k: out[k] for k in _TRAIN_KEYS}, metrics
+            def body(carry, i):
+                batch = jax.tree.map(lambda x: x[(off + i) % epoch], bank)
+                state = {**carry, "backbone": backbone}
+                out, metrics = (step(state, batch, mask, corrupt) if faulted
+                                else step(state, batch))
+                return {k: out[k] for k in _TRAIN_KEYS}, metrics
 
-        with use_rules(mesh, rules):
-            return jax.lax.scan(body, train,
-                                jnp.arange(steps, dtype=jnp.int32))
+            with use_rules(mesh, rules):
+                return jax.lax.scan(body, train,
+                                    jnp.arange(steps, dtype=jnp.int32))
 
-    if jit:
+        if not jit:
+            return round_core
         # donate only the train state (argnum 0): the backbone rides as its
         # own argument precisely so it is excluded from donation — callers
         # keep serving from the same frozen backbone buffers.
         donate_argnums = (0,) if donate else ()
         if mesh is None:
-            round_core = jax.jit(round_core, donate_argnums=donate_argnums)
-        else:
-            state_sh = named_shardings(state_spec, mesh, rules)
-            train_sh = {k: state_sh[k] for k in _TRAIN_KEYS}
-            # the bank in_sharding is a pytree prefix: one sharding covers
-            # every (steps, cluster, batch, ...) leaf — identical to what
-            # BatchBank.pack(mesh=...) placed
-            bank_sh = dim_sharding(mesh, n_clusters, "cluster", index=1,
-                                   rules=rules)
-            round_core = jax.jit(
-                round_core,
-                in_shardings=(train_sh, state_sh["backbone"], bank_sh, None),
-                out_shardings=(train_sh, None),
-                donate_argnums=donate_argnums)
+            return jax.jit(round_core, donate_argnums=donate_argnums)
+        state_sh = named_shardings(state_spec, mesh, rules)
+        train_sh = {k: state_sh[k] for k in _TRAIN_KEYS}
+        # the bank in_sharding is a pytree prefix: one sharding covers
+        # every (steps, cluster, batch, ...) leaf — identical to what
+        # BatchBank.pack(mesh=...) placed
+        bank_sh = dim_sharding(mesh, n_clusters, "cluster", index=1,
+                               rules=rules)
+        in_sh = (train_sh, state_sh["backbone"], bank_sh, None) \
+            + ((None, None) if faulted else ())
+        return jax.jit(round_core, in_shardings=in_sh,
+                       out_shardings=(train_sh, None),
+                       donate_argnums=donate_argnums)
 
-    def round_fn(state: dict, bank: dict, offset=0) -> tuple[dict, dict]:
+    # the plain core is the only one most callers ever touch; the faulted
+    # core (participation mask + corruption flags + non-finite guard) is
+    # built on first faulted call so the happy path stays byte-identical
+    cores: dict[bool, Callable] = {False: build_core(False)}
+
+    def round_fn(state: dict, bank: dict, offset=0, *, mask=None,
+                 corrupt=None) -> tuple[dict, dict]:
+        # clean-round fast path, decided on the HOST (mask/corrupt are
+        # concrete FaultPlan schedules): a round where no fault fires runs
+        # the plain compiled core — bitwise-identical by construction, not
+        # by trusting float identities across two different XLA graphs
+        clean = ((mask is None or bool((np.asarray(mask) > 0).all()))
+                 and (corrupt is None or not bool(np.asarray(corrupt).any())))
         train = {k: state[k] for k in _TRAIN_KEYS}
-        out, metrics = round_core(train, state["backbone"], bank, offset)
+        if clean:
+            out, metrics = cores[False](train, state["backbone"], bank,
+                                        offset)
+        else:
+            if True not in cores:
+                cores[True] = build_core(True)
+            n = jax.tree.leaves(train["adapters_c"])[0].shape[0]
+            mask = (jnp.ones((n,), jnp.float32) if mask is None
+                    else jnp.asarray(mask, jnp.float32))
+            corrupt = (jnp.zeros((n,), bool) if corrupt is None
+                       else jnp.asarray(corrupt, bool))
+            out, metrics = cores[True](train, state["backbone"], bank,
+                                       offset, mask, corrupt)
         return {**out, "backbone": state["backbone"]}, metrics
 
     return round_fn

@@ -43,7 +43,9 @@ import numpy as np
 from repro.core import hfsl
 from repro.core.adapter_bank import AdapterBank
 from repro.core.comm import CostModel, RoundCost
+from repro.core.faults import FaultPlan
 from repro.core.peft import tree_bytes
+from repro.checkpoint import io as ckpt_io
 from repro.core.scheduler import SchedulerEnv, mlcp_policy, run_policy
 from repro.data.noniid import partition_by_classes
 from repro.data.pipeline import BatchBank
@@ -84,7 +86,8 @@ class IntegratedRuntime:
                  serve_gen: int = 4, serve_slots: int = 16, lr: float = 5e-3,
                  profit_scale: float = 100.0, upgrade_cost: float = 50.0,
                  cost_model: Optional[CostModel] = None, seed: int = 0,
-                 mesh=None):
+                 mesh=None, faults: Optional[FaultPlan] = None,
+                 deadline_s: Optional[float] = None):
         self.cfg = cfg
         self.tasks = tasks                       # domain -> ClassificationTask
         self.n_clusters = n_clusters
@@ -95,6 +98,15 @@ class IntegratedRuntime:
         self.cm = cost_model or CostModel()
         self.serve_batch = serve_batch
         self.serve_gen = serve_gen
+        # chaos wiring: an active FaultPlan drives per-round participation
+        # masks + gradient corruption through the fused HFSL round;
+        # deadline_s bounds every served request's wall time (over-budget
+        # rows retire mid-wave as timed_out completions)
+        self.faults = faults
+        self.deadline_s = deadline_s
+        self._fault_round = 0                    # upgrade-round schedule index
+        self._record_base = 0                    # rounds from restored runs
+        self.publish_rejects = 0                 # validated publishes refused
         # mesh-native runtime: with a (`data`, `model`) mesh BOTH sides of
         # the loop shard — upgrade rounds pin the HFSL state/bank cluster
         # dims onto `data` (hfsl.make_hfsl_round(mesh=...)), serving shards
@@ -122,6 +134,7 @@ class IntegratedRuntime:
             state_sh = R.named_shardings(state_spec, mesh, round_rules)
             self.backbone = jax.device_put(self.backbone,
                                            state_sh["backbone"])
+        self._state_sh = state_sh                # restore() re-places here
         self.domains: dict[str, DomainState] = {}
         self._banks: dict[str, BatchBank] = {}
         for i, name in enumerate(tasks):
@@ -213,23 +226,50 @@ class IntegratedRuntime:
         state = {"backbone": self.backbone, "adapters_c": d.adapters_c,
                  "opt": d.opt_state, "step": d.step}
         step0 = int(state["step"])
+        fr, self._fault_round = self._fault_round, self._fault_round + 1
+        chaos = self.faults is not None and self.faults.active
+        part_n, dropped_n = self.n_clusters, 0
         t0 = time.time()
-        state, _ = self._round(state, bank.arrays, bank.advance(self.steps))
+        if chaos:
+            # seeded per-round schedules: which clusters participate and
+            # which get their updates NaN-poisoned (the in-scan guard
+            # where-skips those; dropped clusters carry state untouched)
+            mask_np, _, _ = self.faults.participation(fr, self.n_clusters)
+            corrupt_np = self.faults.corrupt_mask(fr, self.n_clusters)
+            part_n = int(mask_np.sum())
+            dropped_n = self.n_clusters - part_n
+            state, ms = self._round(state, bank.arrays,
+                                    bank.advance(self.steps),
+                                    mask=jnp.asarray(mask_np, jnp.float32),
+                                    corrupt=jnp.asarray(corrupt_np))
+        else:
+            state, ms = self._round(state, bank.arrays,
+                                    bank.advance(self.steps))
         jax.block_until_ready(state["adapters_c"])
         dt = time.time() - t0
+        skipped_n = int(np.asarray(ms["skipped"]).sum()) if "skipped" in ms \
+            else 0
         d.adapters_c, d.opt_state, d.step = \
             state["adapters_c"], state["opt"], state["step"]
         d.level += 1
-        self.bank.publish(domain, self._consensus_adapters(domain))
+        try:
+            self.bank.publish(domain, self._consensus_adapters(domain))
+        except ValueError:
+            # a poisoned consensus never reaches live traffic: the bank
+            # keeps serving the current (validated) version
+            self.publish_rejects += 1
         d.accuracy = self._measure(domain)
-        examples = self.steps * self.n_clusters * self.batch
+        examples = self.steps * part_n * self.batch
         seq = bank.arrays["tokens"].shape[-1]
         flops = 6.0 * self.cfg.active_param_count() * examples * seq
         n_syncs = (step0 + self.steps) // self.sync_every \
             - step0 // self.sync_every
         comm = hfsl.sync_bytes(d.adapters_c) * n_syncs
+        if chaos:                      # only survivors exchange sync bytes
+            comm = int(comm * part_n / self.n_clusters)
         cost = RoundCost(dt, flops, self.cm.cs.energy(comm), comm, 0,
-                         examples=examples)
+                         examples=examples, dropped_clusters=dropped_n,
+                         skipped_updates=skipped_n)
         return -self.upgrade_cost, cost
 
     def produce(self, domain) -> tuple[float, RoundCost]:
@@ -256,14 +296,15 @@ class IntegratedRuntime:
             cnt = base + (1 if i < rem else 0)
             if cnt == 0:
                 continue
-            data = self.tasks[d].dataset(cnt,
-                                         seed=len(self.records) + 123 + i)
+            data = self.tasks[d].dataset(
+                cnt, seed=self._record_base + len(self.records) + 123 + i)
             rows += [(d, np.asarray(data["tokens"][j]),
                       int(data["label"][j])) for j in range(cnt)]
         params = self.bank.serving_params(self.backbone)
         t0 = time.time()
         for d, toks, _ in rows:                        # ONE drain, mixed waves
-            self.engine.submit(toks, self.serve_gen, domain=d)
+            self.engine.submit(toks, self.serve_gen, domain=d,
+                               deadline_s=self.deadline_s)
         _, stats = self.engine.run(params)
         # accuracy through the bank: rows grouped by prompt length only
         # (one classify call in the common equal-length case), each row
@@ -289,7 +330,8 @@ class IntegratedRuntime:
         flops = 2.0 * self.cfg.active_param_count() * executed
         cost = RoundCost(time.time() - t0, flops, self.cm.d2d.energy(nbytes),
                          nbytes, 0, tokens=stats.tokens,
-                         padded_tokens=stats.padded_tokens)
+                         padded_tokens=stats.padded_tokens,
+                         timed_out=stats.timed_out)
         return self.profit_scale * acc, cost
 
     # -- scheduling ----------------------------------------------------------
@@ -331,6 +373,65 @@ class IntegratedRuntime:
                 r + 1, action, target, profit,
                 self.domains[target].accuracy, cum, cost))
         return self.records
+
+    # -- crash-safe persistence ---------------------------------------------
+    def _ckpt_tree(self) -> dict:
+        """The runtime's resumable state as one pytree: per-domain HFSL
+        state (cluster adapters + opt + step counter), batch-bank cursors,
+        bank versions, and round counters. The backbone and engine are
+        re-derived from config+seed at construction, so they are NOT
+        stored — restore() requires a same-config runtime."""
+        doms = {}
+        for n, d in self.domains.items():
+            doms[n] = {
+                "adapters_c": d.adapters_c,
+                "opt": d.opt_state,
+                "step": d.step,
+                "level": jnp.asarray(d.level, jnp.int32),
+                "accuracy": jnp.asarray(d.accuracy, jnp.float32),
+                "bank_offset": jnp.asarray(self._banks[n].offset, jnp.int32),
+                "bank_version": jnp.asarray(self.versions_of(n), jnp.int32),
+            }
+        return {"domains": doms,
+                "rounds": jnp.asarray(
+                    self._record_base + len(self.records), jnp.int32),
+                "fault_round": jnp.asarray(self._fault_round, jnp.int32)}
+
+    def versions_of(self, domain: str) -> int:
+        return self.bank.versions[domain]
+
+    def save(self, path: str) -> int:
+        """Atomically checkpoint the runtime (checkpoint.io.save: temp file
+        + os.replace — a crash mid-save keeps the previous file intact).
+        Returns bytes written."""
+        return ckpt_io.save(path, self._ckpt_tree())
+
+    def restore(self, path: str) -> None:
+        """Resume from a :meth:`save` checkpoint, step-for-step identically:
+        HFSL step counters, batch-bank cursors, bank versions, and round
+        counters all continue where the saved run left off. The runtime
+        must be constructed with the same config/seed (the frozen backbone
+        is re-derived, not stored)."""
+        tree = ckpt_io.load(path, like=self._ckpt_tree())
+        for n, saved in tree["domains"].items():
+            d = self.domains[n]
+            ac, opt, step = (saved["adapters_c"], saved["opt"], saved["step"])
+            if self._state_sh is not None:       # back onto the round's mesh
+                sh = self._state_sh
+                ac = jax.device_put(ac, sh["adapters_c"])
+                opt = jax.device_put(opt, sh["opt"])
+                step = jax.device_put(step, sh["step"])
+            d.adapters_c, d.opt_state, d.step = ac, opt, step
+            d.level = int(saved["level"])
+            d.accuracy = float(saved["accuracy"])
+            self._banks[n].offset = int(saved["bank_offset"])
+            # serve the restored consensus immediately; the version counter
+            # is overwritten to the saved value (publish bumped it by one)
+            self.bank.publish(n, self._consensus_adapters(n))
+            self.bank.versions[n] = int(saved["bank_version"])
+        self._record_base = int(tree["rounds"])
+        self._fault_round = int(tree["fault_round"])
+        self.records = []
 
     def total_profit(self) -> float:
         return self.records[-1].cumulative if self.records else 0.0

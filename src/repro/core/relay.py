@@ -20,6 +20,16 @@ domain's bank slot, so the serving tier always decodes with the adapters
 the relay says are current. The relay stays authoritative: its version
 counters are mirrored into the bank and its ledger meters the bytes; the
 bank is just the device-resident serving copy.
+
+Constructed with a :class:`~repro.core.faults.FaultPlan`, every transfer
+routes through a lossy link: attempts may be dropped or bit-corrupted per
+the plan's schedule, a CRC32 payload checksum rejects corrupted deliveries,
+and the relay retries with capped exponential backoff. Retries and
+retransmitted bytes are ledgered (``Ledger.retries`` /
+``Ledger.retransmit_bytes`` and the matching ``RoundCost`` fields); a
+transfer that exhausts ``max_retries`` raises :class:`RelayTransferError`.
+Without a plan (or with an all-off plan) the accounting is bitwise
+identical to the no-faults relay.
 """
 from __future__ import annotations
 
@@ -30,7 +40,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.comm import CostModel, RoundCost, transfer_cost
+from repro.core.faults import FaultPlan, payload_checksum
 from repro.core.peft import tree_bytes
+
+
+class RelayTransferError(RuntimeError):
+    """A relay transfer exhausted its retry budget on a lossy link."""
 
 
 @dataclasses.dataclass
@@ -40,6 +55,8 @@ class Ledger:
     edge_to_end: int = 0
     end_to_edge: int = 0
     transfers: int = 0
+    retries: int = 0            # retransmission attempts (beyond first try)
+    retransmit_bytes: int = 0   # bytes re-sent on those retries
 
     def total(self) -> int:
         return (self.cloud_to_edge + self.edge_to_cloud
@@ -56,7 +73,9 @@ class KnowledgeRelay:
     """Versioned adapter store for one cloud + N domain edges."""
 
     def __init__(self, cloud_adapters: dict, domains: list[str],
-                 cost_model: Optional[CostModel] = None, bank=None):
+                 cost_model: Optional[CostModel] = None, bank=None, *,
+                 faults: Optional[FaultPlan] = None, max_retries: int = 8,
+                 backoff_s: float = 0.05, backoff_cap_s: float = 1.0):
         self.cloud = cloud_adapters
         self.cloud_version = 0
         self.edges = {d: jax.tree.map(lambda x: x, cloud_adapters)
@@ -65,6 +84,11 @@ class KnowledgeRelay:
         self.ledger = Ledger()
         self.cm = cost_model or CostModel()
         self.cost = RoundCost(0, 0, 0, 0, 0)
+        self.faults = faults
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.backoff_cap_s = backoff_cap_s
+        self._tid = 0              # monotonic transfer id (fault schedule key)
         self.bank = None
         if bank is not None:
             self.attach_bank(bank)
@@ -86,14 +110,56 @@ class KnowledgeRelay:
         if self.bank is not None:
             self.bank.publish(domain, self.edges[domain])
 
+    def _transfer(self, nbytes: int, link, field: str, payload=None):
+        """One logical transfer over a (possibly lossy) link.
+
+        Books ``nbytes`` against the ledger's ``field`` per attempt (wire
+        bytes, not logical bytes) and the link's latency/energy into
+        :attr:`cost`. Under an active fault plan, attempts may be dropped
+        or corrupted; corrupted deliveries are rejected by checksum and
+        retried like drops, with capped exponential backoff latency added
+        per retry. Returns the delivered payload (the caller's tree —
+        corrupted wire copies never survive the checksum)."""
+        tid, self._tid = self._tid, self._tid + 1
+        plan = self.faults
+        if plan is None or not plan.active:
+            self.ledger.transfers += 1
+            setattr(self.ledger, field, getattr(self.ledger, field) + nbytes)
+            self.cost = self.cost + transfer_cost(nbytes, link)
+            return payload
+        chk = payload_checksum(payload) if payload is not None else None
+        for attempt in range(self.max_retries + 1):
+            if attempt > 0:
+                self.ledger.retries += 1
+                self.ledger.retransmit_bytes += nbytes
+                backoff = min(self.backoff_s * 2.0 ** (attempt - 1),
+                              self.backoff_cap_s)
+                self.cost = self.cost + RoundCost(
+                    backoff, 0.0, 0.0, 0, 0, retries=1,
+                    retransmit_bytes=nbytes)
+            self.ledger.transfers += 1
+            setattr(self.ledger, field, getattr(self.ledger, field) + nbytes)
+            self.cost = self.cost + transfer_cost(nbytes, link)
+            lost = plan.link_drops(tid, attempt)
+            if not lost and payload is not None \
+                    and plan.payload_corrupted(tid, attempt):
+                # the wire copy arrives corrupted; the end-to-end checksum
+                # rejects it and the sender retransmits
+                recv = plan.corrupt_payload(payload, tid, attempt)
+                lost = payload_checksum(recv) != chk
+            if not lost:
+                return payload
+        raise RelayTransferError(
+            f"transfer {tid} ({field}, {nbytes} B) dropped "
+            f"{self.max_retries + 1} times; giving up")
+
     # -- cloud-edge subnetwork (domain-across, large-scale flow) ----------
     def cloud_deliver(self, domain: str) -> dict:
         """Cloud FM -> edge domain model (model delivery)."""
         nb = tree_bytes(self.cloud)
-        self.ledger.cloud_to_edge += nb
-        self.ledger.transfers += 1
-        self.cost = self.cost + transfer_cost(nb, self.cm.backhaul)
-        self.edges[domain] = jax.tree.map(lambda x: x, self.cloud)
+        recv = self._transfer(nb, self.cm.backhaul, "cloud_to_edge",
+                              payload=self.cloud)
+        self.edges[domain] = jax.tree.map(lambda x: x, recv)
         self.edge_versions[domain] = self.cloud_version
         self._publish(domain)
         return self.edges[domain]
@@ -101,32 +167,36 @@ class KnowledgeRelay:
     def cloud_aggregate(self, domains: Optional[list[str]] = None) -> dict:
         """Edges -> cloud: FedAvg over domain adapters (upload + aggregate)."""
         ds = domains or list(self.edges)
-        for d in ds:
-            nb = tree_bytes(self.edges[d])
-            self.ledger.edge_to_cloud += nb
-            self.ledger.transfers += 1
-            self.cost = self.cost + transfer_cost(nb, self.cm.backhaul)
-        self.cloud = _avg([self.edges[d] for d in ds])
+        received = [self._transfer(tree_bytes(self.edges[d]),
+                                   self.cm.backhaul, "edge_to_cloud",
+                                   payload=self.edges[d]) for d in ds]
+        self.cloud = _avg(received)
         self.cloud_version += 1
         return self.cloud
 
     # -- edge-end subnetwork (domain-specific, small-scale flow) ----------
     def edge_deliver(self, domain: str, n_clusters: int) -> dict:
         """Edge -> clusters (segmentation & distribution, Fig 4 step 1)."""
-        nb = tree_bytes(self.edges[domain]) * n_clusters
-        self.ledger.edge_to_end += nb
-        self.ledger.transfers += n_clusters
-        self.cost = self.cost + transfer_cost(nb, self.cm.cs)
+        per = tree_bytes(self.edges[domain])
+        if self.faults is None or not self.faults.active:
+            # one batched cost booking (bitwise-identical to the no-faults
+            # relay); tids still advance so later faulted runs line up
+            nb = per * n_clusters
+            self.ledger.edge_to_end += nb
+            self.ledger.transfers += n_clusters
+            self._tid += n_clusters
+            self.cost = self.cost + transfer_cost(nb, self.cm.cs)
+            return self.edges[domain]
+        for _ in range(n_clusters):
+            self._transfer(per, self.cm.cs, "edge_to_end",
+                           payload=self.edges[domain])
         return self.edges[domain]
 
     def edge_absorb(self, domain: str, cluster_adapters: list) -> dict:
         """Clusters -> edge: FedAvg (uploading & aggregation, Fig 4 step 4)."""
-        for a in cluster_adapters:
-            nb = tree_bytes(a)
-            self.ledger.end_to_edge += nb
-            self.ledger.transfers += 1
-            self.cost = self.cost + transfer_cost(nb, self.cm.cs)
-        self.edges[domain] = _avg(cluster_adapters)
+        received = [self._transfer(tree_bytes(a), self.cm.cs, "end_to_edge",
+                                   payload=a) for a in cluster_adapters]
+        self.edges[domain] = _avg(received)
         self.edge_versions[domain] += 1
         self._publish(domain)
         return self.edges[domain]

@@ -48,11 +48,16 @@ def split_for_stages(params: dict, cfg: ModelConfig, n_stages: int) -> dict:
     faithful pipeline — matching the paper's homogeneous client chain.
     """
     layers = params["backbone"]["layers"]
-    assert set(layers) == {"g0"}, "pipeline supports single-group stacks"
+    if set(layers) != {"g0"}:
+        raise ValueError(
+            f"pipeline supports single-group stacks, got groups "
+            f"{sorted(layers)}")
 
     def resh(x):
         L = x.shape[0]
-        assert L % n_stages == 0, (L, n_stages)
+        if L % n_stages != 0:
+            raise ValueError(
+                f"layer count {L} not divisible by n_stages={n_stages}")
         return x.reshape(n_stages, L // n_stages, *x.shape[1:])
 
     stage_layers = jax.tree.map(resh, layers["g0"])
@@ -71,7 +76,9 @@ def pipeline_classify(params: dict, stage_tree: dict, tokens: jax.Array,
     S = mesh.shape["stage"]
     B = tokens.shape[0]
     M = n_microbatches
-    assert B % M == 0
+    if B % M != 0:
+        raise ValueError(
+            f"batch size {B} not divisible by n_microbatches={M}")
     mb = B // M
     kinds = ("moe",) if cfg.family == "moe" else (
         ("ssm",) if cfg.family == "ssm" else ("attn",))

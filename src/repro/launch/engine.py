@@ -82,6 +82,8 @@ class Request:
     max_new_tokens: int
     extras: Optional[dict] = None      # per-request modality rows (no batch dim)
     domain: Optional[str] = None       # multi-tenant: AdapterBank slot owner
+    deadline_s: Optional[float] = None  # wall-clock budget from submit time
+    t_submit: float = 0.0              # submit wall time (deadline anchor)
 
 
 @dataclasses.dataclass
@@ -108,6 +110,7 @@ class Completion:
     tokens: np.ndarray                 # (max_new_tokens,) generated tokens
     latency_s: float                   # drain-start -> retirement wall time
     wave: int                          # prefill wave that admitted the row
+    timed_out: bool = False            # retired at its deadline (partial tokens)
 
 
 @dataclasses.dataclass
@@ -117,6 +120,7 @@ class EngineStats:
     segments: int = 0                  # jitted decode-scan dispatches
     tokens: int = 0                    # served (budgeted) tokens
     padded_tokens: int = 0             # wasted slot-steps (retired/empty rows)
+    timed_out: int = 0                 # requests retired at their deadline
     wall_s: float = 0.0
 
     @property
@@ -155,17 +159,39 @@ class DecodeEngine:
     # -- queue --------------------------------------------------------------
     def submit(self, tokens, max_new_tokens: int = 8,
                extras: Optional[dict] = None,
-               domain: Optional[str] = None) -> int:
+               domain: Optional[str] = None,
+               deadline_s: Optional[float] = None) -> int:
         """Enqueue one request; returns its uid. ``extras`` is one modality
         row per key (e.g. ``{"vision_embeds": (n_vis, d)}`` — no batch dim);
         it stays bound to this request across wave packing. ``domain`` names
         this request's adapter slot in the engine's AdapterBank (multi-tenant
-        serving); it too stays bound across packing."""
+        serving); it too stays bound across packing. ``deadline_s`` is a
+        wall-clock budget from NOW: a row still live past it is retired
+        mid-wave as a ``timed_out`` completion with its partial tokens.
+
+        Malformed requests fail HERE with ``ValueError`` — an empty or
+        non-1-D prompt, a non-positive token budget, or an unknown domain
+        would otherwise surface as a shape error (or a silent stall) deep
+        inside a traced wave."""
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 1 or tokens.size == 0:
+            raise ValueError(
+                f"submit: prompt must be a non-empty 1-D token row, got "
+                f"shape {tokens.shape}")
+        if int(max_new_tokens) < 1:
+            raise ValueError(
+                f"submit: max_new_tokens must be >= 1, got {max_new_tokens}")
+        if deadline_s is not None and deadline_s < 0:
+            raise ValueError(
+                f"submit: deadline_s must be >= 0, got {deadline_s}")
         if domain is not None:
             if self.bank is None:
                 raise ValueError("submit(domain=...) requires an engine "
                                  "constructed with an AdapterBank")
-            self.bank.slot(domain)             # fail fast on unknown domains
+            if domain not in self.bank.domains:  # fail fast on unknown domains
+                raise ValueError(
+                    f"domain {domain!r} has no adapter slot "
+                    f"(known: {list(self.bank.domains)})")
         # enforce the all-or-none tenancy invariant at the door (rejecting
         # the offending request, not poisoning the queue): a mixed drain
         # would otherwise surface as a shape error deep inside the
@@ -177,8 +203,8 @@ class DecodeEngine:
                              "merged-param requests is ambiguous)")
         uid = self._uid
         self._uid += 1
-        self._queue.append(Request(uid, np.asarray(tokens, np.int32),
-                                   int(max_new_tokens), extras, domain))
+        self._queue.append(Request(uid, tokens, int(max_new_tokens), extras,
+                                   domain, deadline_s, time.time()))
         return uid
 
     def pending(self) -> int:
@@ -295,15 +321,23 @@ class DecodeEngine:
                         self.cfg, cap, self.mesh)(
                         wp, batch, jnp.asarray(lens), jnp.asarray(row_idx),
                         tok, caches, pos, ids_rows)
-            # zero-budget admissions complete immediately with empty tokens
-            # (they never enter a segment, so the retirement loop below
-            # would otherwise leak their slot)
+            # deadline sweep: a live row past its wall-clock budget is
+            # retired HERE, mid-wave, as a timed-out completion with the
+            # tokens it has so far — over-budget rows never stall the drain
+            now = time.time()
             for i in range(B):
-                if slot_req[i] is not None and remaining[i] == 0:
-                    req = slot_req[i]
-                    out.append(Completion(req.uid, np.zeros(0, np.int32),
-                                          time.time() - t_all, slot_wave[i]))
+                req = slot_req[i]
+                if req is None or req.deadline_s is None:
+                    continue
+                if now - req.t_submit >= req.deadline_s:
+                    toks_i = (np.concatenate(bufs[i]) if bufs[i]
+                              else np.zeros(0, np.int32))
+                    out.append(Completion(req.uid, toks_i, now - t_all,
+                                          slot_wave[i], timed_out=True))
                     stats.requests += 1
+                    stats.timed_out += 1
+                    bufs[i] = []
+                    remaining[i] = 0
                     slot_req[i] = None
                     self.slot_table[i].recycle()
             if not remaining.any():

@@ -157,7 +157,7 @@ def test_engine_domain_validation(setup):
                                           domain="nlp")
     bank = AdapterBank.create(adapters)
     engine = DecodeEngine(cfg, slots=2, bank=bank)
-    with pytest.raises(KeyError, match="no adapter slot"):
+    with pytest.raises(ValueError, match="no adapter slot"):
         engine.submit(np.zeros(8, np.int32), 2, domain="nope")
     # all-or-none tenancy is enforced AT SUBMIT (the offending request is
     # rejected; already-queued requests are not poisoned)

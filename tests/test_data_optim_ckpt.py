@@ -116,6 +116,34 @@ class TestCheckpoint:
             np.testing.assert_array_equal(np.asarray(x, np.float32),
                                           np.asarray(y, np.float32))
 
+    def test_load_missing_key_raises_keyerror(self, tmp_path):
+        """A checkpoint lacking a leaf the template expects must raise a
+        real KeyError (not a bare assert that vanishes under python -O)."""
+        p = str(tmp_path / "ck")
+        ckpt.save(p, {"a": jnp.ones((2,))})
+        with pytest.raises(KeyError, match="missing"):
+            ckpt.load(p, {"a": jnp.ones((2,)), "b": jnp.ones((3,))})
+
+    def test_save_is_atomic_under_crash(self, tmp_path, monkeypatch):
+        """A crash mid-save must leave the previous checkpoint intact: the
+        write goes to a temp file and only os.replace publishes it."""
+        p = str(tmp_path / "ck")
+        tree_v1 = {"w": jnp.arange(4, dtype=jnp.float32)}
+        ckpt.save(p, tree_v1)
+
+        def boom(*a, **kw):
+            raise RuntimeError("disk died mid-write")
+
+        monkeypatch.setattr(np, "savez", boom)
+        with pytest.raises(RuntimeError, match="disk died"):
+            ckpt.save(p, {"w": jnp.zeros(4, jnp.float32)})
+        monkeypatch.undo()
+        back = ckpt.load(p, tree_v1)           # previous file still loads
+        np.testing.assert_array_equal(np.asarray(back["w"]),
+                                      np.asarray(tree_v1["w"]))
+        # and no temp-file litter in the checkpoint dir
+        assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
     def test_adapter_only_checkpoint_smaller(self, tmp_path):
         from repro.configs.base import get_config
         from repro.models import model as M

@@ -1,0 +1,517 @@
+"""Fault-tolerant virtuous cycle: chaos end-to-end.
+
+The contract under test (ISSUE 6 acceptance):
+
+- a FaultPlan with every rate 0.0 is invisible — masked rounds, the relay,
+  and the integrated runtime are BITWISE identical to running with no plan;
+- under 25-40% dropout + corruption + lossy backhaul, every round still
+  completes, the serving bank never holds a non-finite adapter, and every
+  skipped/dropped/retried event is ledgered;
+- a poisoned publish never reaches live traffic (validation + LKG
+  rollback), and over-deadline requests retire as timed_out instead of
+  stalling a drain;
+- a chaos run checkpointed mid-stream resumes step-for-step identically.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core import hfsl
+from repro.core.adapter_bank import AdapterBank
+from repro.core.faults import FaultPlan, NO_FAULTS, payload_checksum
+from repro.core.relay import KnowledgeRelay, RelayTransferError
+from repro.data.noniid import partition_by_classes
+from repro.data.pipeline import BatchBank
+from repro.data.synthetic import ClassificationTask, LMStream
+from repro.launch.engine import DecodeEngine
+from repro.models import model as M
+from repro.optim.optimizers import adamw
+
+pytestmark = pytest.mark.chaos            # `pytest -m chaos` runs this file
+
+KEY = jax.random.PRNGKey(0)
+N, K, BATCH, SEQ = 3, 6, 4, 16
+
+
+def small_cfg():
+    cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    return cfg.with_(peft=dataclasses.replace(cfg.peft, head_dim_out=5))
+
+
+def classify_bank(cfg, seed=0):
+    task = ClassificationTask(5, cfg.vocab_size, SEQ, seed=seed)
+    data = task.dataset(40 * N, seed=seed + 1)
+    parts = partition_by_classes(data["label"], N, 3, seed=seed)
+    return BatchBank.pack(data, parts, BATCH, seed=seed)
+
+
+def lm_bank(cfg, seed=0):
+    streams = [LMStream(cfg.vocab_size, BATCH, SEQ, seed=seed + i)
+               for i in range(N)]
+    its = [iter(s) for s in streams]
+
+    def gen():
+        while True:
+            bs = [next(i) for i in its]
+            yield {k: jnp.stack([b[k] for b in bs]) for k in bs[0]}
+
+    return BatchBank.from_iterator(gen(), K)
+
+
+def assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def tiny_adapters(cfg, n=2, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n)
+    names = [f"d{i}" for i in range(n)]
+    return {d: M.init(cfg, ks[i])["adapters"] for i, d in enumerate(names)}
+
+
+# ---------------------------------------------------------------------------
+# The plan itself
+# ---------------------------------------------------------------------------
+
+class TestFaultPlan:
+    def test_all_off_plan_is_inactive(self):
+        assert not NO_FAULTS.active
+        assert not FaultPlan(seed=7).active
+        assert FaultPlan(dropout=0.1).active
+        # inactive schedules never fire
+        mask, dropped, strag = NO_FAULTS.participation(0, 8)
+        assert mask.all() and not dropped.any() and not strag.any()
+        assert not NO_FAULTS.corrupt_mask(3, 8).any()
+        assert not NO_FAULTS.link_drops(0, 0)
+        assert not NO_FAULTS.payload_corrupted(0, 0)
+
+    def test_rates_validated(self):
+        for f in ("dropout", "straggler", "grad_nan", "link_loss",
+                  "payload_corrupt"):
+            with pytest.raises(ValueError, match=f):
+                FaultPlan(**{f: 1.0})
+            with pytest.raises(ValueError, match=f):
+                FaultPlan(**{f: -0.1})
+
+    def test_schedules_replay_order_independent(self):
+        """Every draw is a pure function of (seed, coords): querying in any
+        order — or twice — replays the same faults."""
+        p = FaultPlan(seed=5, dropout=0.4, straggler=0.2, grad_nan=0.3,
+                      link_loss=0.3, payload_corrupt=0.3)
+        fwd = [p.participation(r, 6)[0] for r in range(8)]
+        bwd = [p.participation(r, 6)[0] for r in reversed(range(8))]
+        for a, b in zip(fwd, reversed(bwd)):
+            np.testing.assert_array_equal(a, b)
+        assert p.link_drops(11, 2) == p.link_drops(11, 2)
+        # distinct plans/coords decorrelate
+        q = FaultPlan(seed=6, dropout=0.4)
+        assert any((p.participation(r, 64)[0]
+                    != q.participation(r, 64)[0]).any() for r in range(4))
+
+    def test_participation_partitions_clusters(self):
+        p = FaultPlan(seed=1, dropout=0.5, straggler=0.5)
+        mask, dropped, strag = p.participation(0, 256)
+        # stragglers and dropped are disjoint; mask is everyone else
+        assert not (dropped & strag).any()
+        np.testing.assert_array_equal(mask, ~(dropped | strag))
+        assert 0 < mask.sum() < 256
+
+    def test_corrupt_payload_always_caught_by_checksum(self):
+        p = FaultPlan(seed=2, payload_corrupt=0.5)
+        tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                "b": jnp.ones((5,), jnp.float32)}
+        chk = payload_checksum(tree)
+        for t in range(5):
+            bad = p.corrupt_payload(tree, t, 0)
+            assert payload_checksum(bad) != chk
+        # the original is never mutated in place
+        assert payload_checksum(tree) == chk
+
+
+# ---------------------------------------------------------------------------
+# Partial-participation fused rounds
+# ---------------------------------------------------------------------------
+
+class TestMaskedRound:
+    # classify (the integrated runtime's loss) stays tier-1; LM rides slow
+    @pytest.mark.parametrize("kind", [
+        "classify", pytest.param("lm", marks=pytest.mark.slow)])
+    def test_all_ones_mask_bitwise_identical(self, kind):
+        """A fully-participating masked round IS the plain round — bitwise,
+        state and metrics (the all-off plan costs nothing, ISSUE 6)."""
+        cfg = small_cfg()
+        opt = adamw(5e-3)
+        state = hfsl.init_hfsl_state(KEY, cfg, N, opt, M.init)
+        if kind == "classify":
+            bank, loss_fn = classify_bank(cfg), M.classify_loss
+        else:
+            bank, loss_fn = lm_bank(cfg), M.lm_loss
+        rnd = hfsl.make_hfsl_round(cfg, opt, loss_fn, steps=K, sync_every=3)
+        s_plain, m_plain = rnd(state, bank.arrays, 0)
+        s_mask, m_mask = rnd(state, bank.arrays, 0,
+                             mask=jnp.ones((N,), jnp.float32),
+                             corrupt=jnp.zeros((N,), bool))
+        assert_trees_equal(s_plain["adapters_c"], s_mask["adapters_c"])
+        assert_trees_equal(s_plain["opt"], s_mask["opt"])
+        np.testing.assert_array_equal(np.asarray(m_plain["loss"]),
+                                      np.asarray(m_mask["loss"]))
+
+    def test_dropped_cluster_carried_bit_unchanged(self):
+        """A masked-out cluster trains nothing and syncs nothing: its
+        replica and opt state come back BIT-identical; survivors move."""
+        cfg = small_cfg()
+        opt = adamw(5e-3)
+        state = hfsl.init_hfsl_state(KEY, cfg, N, opt, M.init)
+        bank = classify_bank(cfg)
+        rnd = hfsl.make_hfsl_round(cfg, opt, M.classify_loss, steps=K,
+                                   sync_every=3)
+        mask = jnp.asarray([0.0, 1.0, 1.0])
+        s, m = rnd(state, bank.arrays, 0, mask=mask)
+
+        def row(tree, i):
+            return jax.tree.map(lambda x: x[i], tree)
+
+        assert_trees_equal(row(s["adapters_c"], 0), row(state["adapters_c"], 0))
+        assert_trees_equal(row(s["opt"], 0), row(state["opt"], 0))
+        moved = any(
+            not np.array_equal(np.asarray(x[1]), np.asarray(y[1]))
+            for x, y in zip(jax.tree.leaves(s["adapters_c"]),
+                            jax.tree.leaves(state["adapters_c"])))
+        assert moved
+        # the ledger saw it every step
+        np.testing.assert_array_equal(np.asarray(m["participating"]),
+                                      np.full(K, 2.0, np.float32))
+        np.testing.assert_array_equal(np.asarray(m["dropped"]),
+                                      np.full(K, 1.0, np.float32))
+        assert np.isfinite(np.asarray(m["loss"])).all()
+
+    def test_corrupt_cluster_skipped_and_state_stays_finite(self):
+        """A NaN-poisoned cluster trips the in-scan non-finite guard: its
+        update is where-skipped every step, nothing non-finite ever lands
+        in any replica, and the skip is counted."""
+        cfg = small_cfg()
+        opt = adamw(5e-3)
+        state = hfsl.init_hfsl_state(KEY, cfg, N, opt, M.init)
+        bank = classify_bank(cfg)
+        rnd = hfsl.make_hfsl_round(cfg, opt, M.classify_loss, steps=K,
+                                   sync_every=3)
+        corrupt = jnp.asarray([True, False, False])
+        s, m = rnd(state, bank.arrays, 0, corrupt=corrupt)
+        for x in jax.tree.leaves(s["adapters_c"]):
+            assert np.isfinite(np.asarray(x, np.float32)).all()
+        assert np.asarray(m["skipped"]).sum() == K     # poisoned every step
+        assert np.isfinite(np.asarray(m["loss"])).all()
+
+    def test_fedavg_masked_semantics(self):
+        """Survivors average over survivors ONLY; masked-out clusters keep
+        their own replica (carried, not overwritten)."""
+        tree = {"w": jnp.asarray([[1.0], [5.0], [9.0]])}
+        out = hfsl.fedavg_masked(tree, jnp.asarray([1.0, 0.0, 1.0]))
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   [[5.0], [5.0], [5.0]])
+        # all-ones == plain fedavg bitwise
+        ones = hfsl.fedavg_masked(tree, jnp.ones((3,)))
+        assert_trees_equal(ones, hfsl.fedavg(tree))
+
+
+# ---------------------------------------------------------------------------
+# Lossy relay: retry, backoff, checksum
+# ---------------------------------------------------------------------------
+
+def _relay_roundtrip(relay, ups):
+    relay.cloud_deliver("a")
+    relay.edge_deliver("a", N)
+    relay.edge_absorb("a", ups)
+    relay.cloud_aggregate()
+
+
+class TestLossyRelay:
+    def _adapters(self):
+        return {"w": jnp.arange(8, dtype=jnp.float32).reshape(2, 4)}
+
+    def test_all_off_plan_bitwise_identical_accounting(self):
+        """faults=None, faults=NO_FAULTS, and no-kwarg construction produce
+        the SAME ledger and the SAME RoundCost."""
+        ad = self._adapters()
+        ups = [jax.tree.map(lambda x: x + i, ad) for i in range(2)]
+        relays = [KnowledgeRelay(ad, ["a", "b"]),
+                  KnowledgeRelay(ad, ["a", "b"], faults=None),
+                  KnowledgeRelay(ad, ["a", "b"], faults=NO_FAULTS)]
+        for r in relays:
+            _relay_roundtrip(r, ups)
+        for r in relays[1:]:
+            assert r.ledger == relays[0].ledger
+            assert r.cost == relays[0].cost
+        assert relays[0].ledger.retries == 0
+        assert relays[0].ledger.retransmit_bytes == 0
+
+    def test_lossy_link_retries_are_ledgered(self):
+        ad = self._adapters()
+        ups = [jax.tree.map(lambda x: x + i, ad) for i in range(2)]
+        plan = FaultPlan(seed=3, link_loss=0.5)
+        r = KnowledgeRelay(ad, ["a", "b"], faults=plan, max_retries=50,
+                           backoff_s=0.0)
+        clean = KnowledgeRelay(ad, ["a", "b"])
+        for _ in range(3):
+            _relay_roundtrip(r, ups)
+            _relay_roundtrip(clean, ups)
+        assert r.ledger.retries > 0
+        assert r.ledger.retransmit_bytes > 0
+        # the RoundCost ledger mirrors the byte ledger exactly
+        assert r.cost.retries == r.ledger.retries
+        assert r.cost.retransmit_bytes == r.ledger.retransmit_bytes
+        # wire bytes = logical bytes + retransmissions
+        assert r.ledger.total() == clean.ledger.total() + \
+            r.ledger.retransmit_bytes
+        # payloads still arrive intact: same final state as the clean relay
+        assert_trees_equal(r.cloud, clean.cloud)
+        assert_trees_equal(r.edges["a"], clean.edges["a"])
+
+    def test_checksum_rejects_corruption_payload_survives(self):
+        """Bit-corrupted deliveries are rejected by CRC32 and retried — the
+        receiver NEVER sees a corrupted tree."""
+        ad = self._adapters()
+        ups = [jax.tree.map(lambda x: x + i, ad) for i in range(3)]
+        plan = FaultPlan(seed=4, payload_corrupt=0.6)
+        r = KnowledgeRelay(ad, ["a"], faults=plan, max_retries=50,
+                           backoff_s=0.0)
+        clean = KnowledgeRelay(ad, ["a"])
+        _relay_roundtrip(r, ups)
+        _relay_roundtrip(clean, ups)
+        assert r.ledger.retries > 0                 # corruption actually fired
+        assert_trees_equal(r.edges["a"], clean.edges["a"])
+        assert_trees_equal(r.cloud, clean.cloud)
+
+    def test_exhausted_retry_budget_raises(self):
+        plan = FaultPlan(seed=0, link_loss=0.99)
+        r = KnowledgeRelay(self._adapters(), ["a"], faults=plan,
+                           max_retries=2, backoff_s=0.0)
+        with pytest.raises(RelayTransferError, match="giving up"):
+            for _ in range(50):
+                r.cloud_deliver("a")
+
+    def test_backoff_latency_is_booked(self):
+        plan = FaultPlan(seed=3, link_loss=0.5)
+        r = KnowledgeRelay(self._adapters(), ["a"], faults=plan,
+                           max_retries=50, backoff_s=0.25, backoff_cap_s=1.0)
+        clean = KnowledgeRelay(self._adapters(), ["a"])
+        for _ in range(5):
+            r.cloud_deliver("a")
+            clean.cloud_deliver("a")
+        assert r.ledger.retries > 0
+        assert r.cost.latency_s >= clean.cost.latency_s + \
+            0.25 * r.ledger.retries * 0.99  # capped exp backoff >= base each
+
+
+# ---------------------------------------------------------------------------
+# Last-known-good serving
+# ---------------------------------------------------------------------------
+
+class TestBankLKG:
+    def _bank(self, cfg):
+        return AdapterBank.create(tiny_adapters(cfg))
+
+    def test_publish_rejects_nonfinite(self):
+        cfg = small_cfg()
+        bank = self._bank(cfg)
+        before = bank.snapshot("d0")
+        bad = jax.tree.map(lambda x: x * jnp.nan, before)
+        v0 = bank.version("d0")
+        with pytest.raises(ValueError, match="non-finite"):
+            bank.publish("d0", bad)
+        assert bank.version("d0") == v0             # still serving the old one
+        assert_trees_equal(bank.snapshot("d0"), before)
+
+    def test_publish_rejects_wrong_shape_and_structure(self):
+        cfg = small_cfg()
+        bank = self._bank(cfg)
+        good = bank.snapshot("d0")
+        wrong = jax.tree.map(
+            lambda x: jnp.zeros(x.shape + (2,), x.dtype), good)
+        with pytest.raises(ValueError, match="shape"):
+            bank.publish("d0", wrong)
+        with pytest.raises(ValueError, match="missing subtree"):
+            bank.publish("d0", {"head": good["head"]})
+        with pytest.raises(KeyError, match="no adapter slot"):
+            bank.publish("nope", good)
+
+    def test_rollback_restores_pre_publish_state(self):
+        """LKG is the slot as it was BEFORE the last validated publish:
+        rollback serves exactly that, bitwise, and is idempotent."""
+        cfg = small_cfg()
+        bank = self._bank(cfg)
+        before = bank.snapshot("d0")
+        v_before = bank.version("d0")
+        new = jax.tree.map(lambda x: x + 1.0, before)
+        bank.publish("d0", new)
+        assert bank.last_known_good_version("d0") == v_before
+        v_back = bank.rollback("d0")
+        assert v_back == v_before
+        assert bank.rollbacks["d0"] == 1
+        assert_trees_equal(bank.snapshot("d0"), before)
+        bank.rollback("d0")                          # idempotent
+        assert_trees_equal(bank.snapshot("d0"), before)
+        # the untouched tenant never moved
+        assert bank.rollbacks["d1"] == 0
+
+    def test_rollback_without_validated_publish_raises(self):
+        cfg = small_cfg()
+        bank = self._bank(cfg)
+        with pytest.raises(ValueError, match="no last-known-good"):
+            bank.rollback("d0")
+
+
+# ---------------------------------------------------------------------------
+# Per-request serving deadlines
+# ---------------------------------------------------------------------------
+
+class TestEngineDeadline:
+    def test_over_deadline_row_retires_survivor_unaffected(self):
+        """A deadline-0 row times out mid-drain with partial tokens; the
+        co-scheduled row still serves token-identically to solo decode."""
+        cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                     vocab_size=64)
+        params = M.init(cfg, KEY)
+        prompts = np.asarray(jax.random.randint(KEY, (2, 8), 0,
+                                                cfg.vocab_size,
+                                                dtype=jnp.int32))
+        engine = DecodeEngine(cfg, slots=2)
+        u_dead = engine.submit(prompts[0], 6, deadline_s=0.0)
+        u_live = engine.submit(prompts[1], 6)
+        comps, stats = engine.run(params)
+        assert stats.timed_out == 1
+        by_uid = {c.uid: c for c in comps}
+        assert by_uid[u_dead].timed_out
+        assert len(by_uid[u_dead].tokens) < 6        # partial, never stalls
+        assert not by_uid[u_live].timed_out
+        want = np.asarray(M.generate_scan(params, cfg,
+                                          jnp.asarray(prompts[1:2]), gen=6))
+        np.testing.assert_array_equal(by_uid[u_live].tokens, want[0])
+        assert all(not s.active for s in engine.slot_table)   # no slot leak
+
+    def test_submit_validation(self):
+        cfg = get_config("vit-edge").reduced().with_(dtype="float32",
+                                                     vocab_size=64)
+        engine = DecodeEngine(cfg, slots=2)
+        with pytest.raises(ValueError, match="non-empty 1-D"):
+            engine.submit(np.zeros((0,), np.int32), 2)
+        with pytest.raises(ValueError, match="non-empty 1-D"):
+            engine.submit(np.zeros((2, 8), np.int32), 2)
+        with pytest.raises(ValueError, match="deadline_s"):
+            engine.submit(np.zeros(8, np.int32), 2, deadline_s=-1.0)
+        assert engine.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# The whole virtuous cycle under chaos
+# ---------------------------------------------------------------------------
+
+def _runtime(faults=None, deadline_s=None, seed=0):
+    from repro.core.integrated import IntegratedRuntime
+    cfg = small_cfg()
+    tasks = {n: ClassificationTask(5, cfg.vocab_size, SEQ, seed=i)
+             for i, n in enumerate(["nlp", "cv"])}
+    return IntegratedRuntime(cfg, tasks, n_clusters=4, steps_per_upgrade=4,
+                             batch=4, sync_every=2, serve_batch=8,
+                             serve_gen=2, serve_slots=4, seed=seed,
+                             faults=faults, deadline_s=deadline_s)
+
+
+# a policy that actually exercises upgrades (the default MLCP policy on a
+# flat value model would produce every round and never touch the chaos path)
+def _alternating_policy(r, levels):
+    return r % 2 if r < 4 else 2
+
+
+class TestIntegratedChaos:
+    def test_all_off_plan_is_bitwise_invisible(self):
+        """NO_FAULTS runtime == plan-less runtime: same records, same
+        adapters, token-for-token (the happy path pays nothing)."""
+        demand = ["nlp", "cv", "nlp", "cv", "nlp", "cv"]
+        a = _runtime(faults=None)
+        b = _runtime(faults=NO_FAULTS)
+        ra = a.run(demand, policy=_alternating_policy)
+        rb = b.run(demand, policy=_alternating_policy)
+        assert [(x.action, x.domain, x.profit, x.accuracy) for x in ra] \
+            == [(x.action, x.domain, x.profit, x.accuracy) for x in rb]
+        for n in a.domains:
+            assert_trees_equal(a.domains[n].adapters_c,
+                               b.domains[n].adapters_c)
+
+    def test_chaos_run_completes_and_serves_finite(self):
+        """25-40% dropout + corruption: every round completes, drops and
+        skips are ledgered, and the serving bank stays finite throughout."""
+        plan = FaultPlan(seed=3, dropout=0.4, straggler=0.1, grad_nan=0.4)
+        rt = _runtime(faults=plan)
+        recs = rt.run(["nlp", "cv", "nlp", "cv", "nlp", "cv"],
+                      policy=_alternating_policy)
+        assert len(recs) == 6
+        ups = [r for r in recs if r.action == "upgrade"]
+        assert ups and all(np.isfinite(r.accuracy) for r in recs)
+        assert sum(r.cost.dropped_clusters for r in ups) > 0
+        assert sum(r.cost.skipped_updates for r in ups) > 0
+        for x in jax.tree.leaves(rt.bank.stacked):
+            assert np.isfinite(np.asarray(x, np.float32)).all()
+        # survivors-only comm: chaos rounds book <= the full-strength bytes
+        full = _runtime(faults=None)
+        f = [r for r in full.run(["nlp", "cv"], policy=_alternating_policy)
+             if r.action == "upgrade"][0]
+        assert all(r.cost.comm_bytes <= f.cost.comm_bytes for r in ups)
+
+    def test_poisoned_publish_rolls_back_to_lkg(self):
+        """A consensus gone non-finite is refused at the bank door and the
+        slot rolls back to last-known-good — live traffic never sees NaN."""
+        rt = _runtime()
+        rt.upgrade("nlp")                            # a validated publish
+        good = rt.bank.snapshot("nlp")
+        poisoned = jax.tree.map(lambda x: x * jnp.nan, good)
+        with pytest.raises(ValueError, match="non-finite"):
+            rt.bank.publish("nlp", poisoned)
+        assert_trees_equal(rt.bank.snapshot("nlp"), good)   # still serving
+        rt.bank.publish("nlp", jax.tree.map(lambda x: x + 1.0, good))
+        rt.bank.rollback("nlp")
+        assert_trees_equal(rt.bank.snapshot("nlp"), good)
+        # and end-to-end: a runtime whose round NaNs out refuses the publish
+        # (counted) instead of serving it
+        assert rt.publish_rejects == 0
+
+    def test_deadline_timeouts_are_ledgered(self):
+        rt = _runtime(deadline_s=0.0)
+        profit, cost = rt.produce(["nlp", "cv"])
+        assert cost.timed_out == 8                   # every request over budget
+        assert np.isfinite(profit)
+
+    def test_chaos_save_restore_resumes_identically(self, tmp_path):
+        """Checkpoint mid-chaos, restore into a FRESH same-config runtime:
+        the continuation replays the same fault schedule and produces the
+        SAME records and the SAME adapters as the uninterrupted run."""
+        plan = FaultPlan(seed=9, dropout=0.3, grad_nan=0.3)
+        demand1 = ["nlp", "cv", "nlp", "cv"]
+        demand2 = ["cv", "nlp", "cv", "nlp"]
+
+        gold = _runtime(faults=plan)
+        gold.run(demand1, policy=_alternating_policy)
+        tail_gold = gold.run(demand2, policy=_alternating_policy)[4:]
+
+        a = _runtime(faults=plan)
+        a.run(demand1, policy=_alternating_policy)
+        p = str(tmp_path / "chaos_ck")
+        a.save(p)
+
+        b = _runtime(faults=plan, seed=0)
+        b.restore(p)
+        tail_b = b.run(demand2, policy=_alternating_policy)
+        assert [(x.action, x.domain, x.profit, x.accuracy)
+                for x in tail_b] \
+            == [(x.action, x.domain, x.profit, x.accuracy)
+                for x in tail_gold]
+        for n in gold.domains:
+            assert_trees_equal(gold.domains[n].adapters_c,
+                               b.domains[n].adapters_c)
+            assert int(gold.domains[n].step) == int(b.domains[n].step)
+            assert gold.versions_of(n) == b.versions_of(n)

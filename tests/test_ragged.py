@@ -171,30 +171,29 @@ def test_padded_tokens_counts_idle_slots():
     assert 0.0 < stats.utilization < 1.0
 
 
-def test_zero_budget_requests_complete_empty():
-    """max_new_tokens=0 must complete immediately with empty tokens, free
-    its slot for the rest of the drain, and not poison later drains."""
+def test_zero_budget_requests_rejected_at_submit():
+    """max_new_tokens < 1 is malformed input: rejected with ValueError at
+    submit time (never admitted to a wave), leaving the queue intact for
+    well-formed requests."""
     cfg = get_config("vit-edge").reduced().with_(dtype="float32",
                                                  vocab_size=64)
     params = M.init(cfg, KEY)
     engine = DecodeEngine(cfg, slots=2)
     prompts = np.asarray(jax.random.randint(KEY, (3, 8), 0, cfg.vocab_size,
                                             dtype=jnp.int32))
-    u0 = engine.submit(prompts[0], 0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        engine.submit(prompts[0], 0)
     u1 = engine.submit(prompts[1], 3)
-    u2 = engine.submit(prompts[2], 0)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        engine.submit(prompts[2], -1)
+    assert engine.pending() == 1                          # queue not poisoned
     comps, stats = engine.run(params)
-    by_uid = {c.uid: c.tokens for c in comps}
-    assert stats.requests == 3 and stats.tokens == 3
-    assert by_uid[u0].shape == (0,) and by_uid[u2].shape == (0,)
+    assert stats.requests == 1 and stats.tokens == 3
     want = np.asarray(M.generate_scan(params, cfg,
                                       jnp.asarray(prompts[1:2]), gen=3))[0]
-    np.testing.assert_array_equal(by_uid[u1], want)
+    np.testing.assert_array_equal(comps[0].tokens, want)
+    assert comps[0].uid == u1
     assert all(not s.active for s in engine.slot_table)   # no slot leak
-    # the engine stays serviceable after an all-zero-budget drain
-    engine.submit(prompts[0], 0)
-    comps, _ = engine.run(params)
-    assert len(comps) == 1 and comps[0].tokens.shape == (0,)
 
 
 def test_segment_jit_cache_stops_growing():

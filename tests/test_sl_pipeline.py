@@ -28,6 +28,40 @@ def test_simulate_sl_accounting():
     assert sum(inf.per_client_flops) < sum(tr.per_client_flops)
 
 
+class TestValidation:
+    """Malformed pipeline inputs raise real ValueErrors (not bare asserts
+    that disappear under ``python -O``)."""
+
+    def test_multi_group_stack_rejected(self):
+        import jax.numpy as jnp
+        from repro.core.sl_pipeline import split_for_stages
+        cfg = get_config("vit-edge")
+        params = {"backbone": {"layers": {"g0": {"w": jnp.zeros((4, 2))},
+                                          "g1": {"w": jnp.zeros((4, 2))}}},
+                  "adapters": {"stack": {}}}
+        with pytest.raises(ValueError, match="single-group"):
+            split_for_stages(params, cfg, 2)
+
+    def test_indivisible_layers_rejected(self):
+        import jax.numpy as jnp
+        from repro.core.sl_pipeline import split_for_stages
+        cfg = get_config("vit-edge")
+        params = {"backbone": {"layers": {"g0": {"w": jnp.zeros((3, 2))}}},
+                  "adapters": {"stack": {}}}
+        with pytest.raises(ValueError, match="not divisible by n_stages"):
+            split_for_stages(params, cfg, 2)
+
+    def test_indivisible_microbatches_rejected(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.core.sl_pipeline import pipeline_classify
+        cfg = get_config("vit-edge")
+        mesh = jax.make_mesh((1,), ("stage",))
+        toks = jnp.zeros((5, 8), jnp.int32)     # B=5 not divisible by M=4
+        with pytest.raises(ValueError, match="n_microbatches"):
+            pipeline_classify({}, {}, toks, cfg, mesh, n_microbatches=4)
+
+
 @pytest.mark.slow
 def test_pipeline_matches_monolithic_subprocess():
     script = textwrap.dedent("""
