@@ -139,6 +139,38 @@ print("[ci] chaos smoke OK (masked round completed finite; "
       "bad publish refused; LKG rollback bitwise)")
 PY
 
+# Speculative-serving smoke: a spec engine drain (tiny recurrent drafter,
+# batched verify, exact-match acceptance + rollback) must be token-for-token
+# identical to plain generate_scan, with the plain baseline's decode
+# attention running through the interpret-mode Pallas flash-decode path —
+# so parity here covers kernel decode vs pure-jnp verify agreement too
+# (the full sweep: tests/test_spec_decode.py).
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import get_config
+from repro.core.spec_decode import SpecDecoder, spec_generate
+from repro.kernels import ops
+from repro.launch.engine import DecodeEngine
+from repro.models import model as M
+
+cfg = get_config("vit-edge").reduced().with_(dtype="float32", vocab_size=64)
+params = M.init(cfg, jax.random.PRNGKey(0))
+spec = SpecDecoder.init(cfg, jax.random.PRNGKey(7), k=3)
+prompts = np.asarray(jax.random.randint(
+    jax.random.PRNGKey(1), (3, 10), 1, cfg.vocab_size, dtype=jnp.int32))
+with ops.backend("interpret"):
+    ref = np.asarray(M.generate_scan(params, cfg, jnp.asarray(prompts),
+                                     gen=7))
+out, stats = spec_generate(params, cfg, spec, prompts, gen=7)
+np.testing.assert_array_equal(np.asarray(out), ref)
+eng = DecodeEngine(cfg, slots=2, spec=spec)
+served, st = eng.serve(params, prompts, gen=7)
+np.testing.assert_array_equal(served, ref)
+assert st.drafted > 0 and st.acceptance_rate == st.accepted / st.drafted
+print("[ci] speculative smoke OK (spec_generate + spec engine drain "
+      f"token-identical to greedy scan; acceptance {st.acceptance_rate:.2f})")
+PY
+
 # Host-device mesh smoke: benchmarks/shard_bench.py spawns a forced
 # 4-host-device ('data','model') mesh subprocess, hard-asserts that the
 # sharded engine drain is token-identical and the sharded HFSL round is

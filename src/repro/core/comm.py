@@ -74,7 +74,13 @@ class RoundCost:
     ``retries``/``retransmit_bytes`` meter lossy-relay retransmissions
     (``comm_bytes`` includes every attempt's bytes on the wire;
     ``retransmit_bytes`` is the share beyond the first attempt), and
-    ``timed_out`` counts requests the engine retired at their deadline."""
+    ``timed_out`` counts requests the engine retired at their deadline.
+
+    Speculative serving rounds (core/spec_decode.py) additionally book
+    ``drafted_tokens`` (edge-drafter proposals) vs ``accepted_tokens``
+    (proposals the target's verify pass committed):
+    :attr:`acceptance_rate` is then the measured draft quality that the
+    round's >1 tokens-per-verify-pass speedup rests on."""
     latency_s: float
     compute_flops: float
     energy_j: float
@@ -88,6 +94,8 @@ class RoundCost:
     retries: int = 0
     retransmit_bytes: int = 0
     timed_out: int = 0
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
 
     @property
     def tok_per_s(self) -> float:
@@ -116,7 +124,15 @@ class RoundCost:
                          self.skipped_updates + o.skipped_updates,
                          self.retries + o.retries,
                          self.retransmit_bytes + o.retransmit_bytes,
-                         self.timed_out + o.timed_out)
+                         self.timed_out + o.timed_out,
+                         self.drafted_tokens + o.drafted_tokens,
+                         self.accepted_tokens + o.accepted_tokens)
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Committed fraction of drafted tokens (speculative serving)."""
+        return (self.accepted_tokens / self.drafted_tokens
+                if self.drafted_tokens else 0.0)
 
 
 def sl_round_cost(trace: SLTrace, cm: CostModel, *,

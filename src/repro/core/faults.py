@@ -32,7 +32,7 @@ import numpy as np
 
 # schedule namespaces (SeedSequence entropy words) — one per fault kind so
 # e.g. the dropout draw for round r never aliases the straggler draw
-_DROP, _STRAGGLE, _CORRUPT, _LINK, _PAYLOAD, _FLIP = range(6)
+_DROP, _STRAGGLE, _CORRUPT, _LINK, _PAYLOAD, _FLIP, _JITTER = range(7)
 
 _RATES = ("dropout", "straggler", "grad_nan", "link_loss", "payload_corrupt")
 
@@ -105,6 +105,14 @@ class FaultPlan:
         return (self.payload_corrupt > 0.0
                 and self._rng(_PAYLOAD, transfer_id, attempt).random()
                 < self.payload_corrupt)
+
+    def retry_jitter(self, transfer_id: int, attempt: int) -> float:
+        """Deterministic backoff jitter draw in [0, 1) for this (transfer,
+        attempt). The relay scales its exponential backoff by ``1 + u``
+        (multiplicative, so jittered backoff never undercuts the base
+        delay) — de-synchronizing retry storms across transfers while
+        keeping every replay of the same plan bitwise identical."""
+        return float(self._rng(_JITTER, transfer_id, attempt).random())
 
     def corrupt_payload(self, tree, transfer_id: int, attempt: int):
         """The wire copy of ``tree`` with one byte of one leaf flipped —

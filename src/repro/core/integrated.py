@@ -87,7 +87,9 @@ class IntegratedRuntime:
                  profit_scale: float = 100.0, upgrade_cost: float = 50.0,
                  cost_model: Optional[CostModel] = None, seed: int = 0,
                  mesh=None, faults: Optional[FaultPlan] = None,
-                 deadline_s: Optional[float] = None):
+                 deadline_s: Optional[float] = None,
+                 spec_k: Optional[int] = None, spec_d_model: int = 64,
+                 spec_layers: int = 2):
         self.cfg = cfg
         self.tasks = tasks                       # domain -> ClassificationTask
         self.n_clusters = n_clusters
@@ -171,8 +173,21 @@ class IntegratedRuntime:
         self.bank = AdapterBank.create(
             {n: self._consensus_adapters(n) for n in self.domains},
             mesh=mesh)
+        # speculative serving: spec_k drafts per verify pass from a tiny
+        # recurrent drafter — the paper's "small edge model assists the
+        # large one" made concrete for inference rounds. The drafter is a
+        # replicated edge model (sharding/rules.py::drafter_rules);
+        # produce() books drafted vs verified tokens in the RoundCost
+        # ledger so the profit policy can see the measured draft quality.
+        self.spec = None
+        if spec_k is not None:
+            from repro.core.spec_decode import SpecDecoder
+            self.spec = SpecDecoder.init(
+                cfg, jax.random.PRNGKey(seed + 997), k=spec_k,
+                d_model=spec_d_model, n_layers=spec_layers)
         self.engine = DecodeEngine(cfg, slots=min(serve_slots, serve_batch),
-                                   seed=seed, bank=self.bank, mesh=mesh)
+                                   seed=seed, bank=self.bank, mesh=mesh,
+                                   spec=self.spec)
 
         def _classify_impl(p, b, ids):
             from repro.sharding import rules as R
@@ -331,7 +346,9 @@ class IntegratedRuntime:
         cost = RoundCost(time.time() - t0, flops, self.cm.d2d.energy(nbytes),
                          nbytes, 0, tokens=stats.tokens,
                          padded_tokens=stats.padded_tokens,
-                         timed_out=stats.timed_out)
+                         timed_out=stats.timed_out,
+                         drafted_tokens=stats.drafted,
+                         accepted_tokens=stats.accepted)
         return self.profit_scale * acc, cost
 
     # -- scheduling ----------------------------------------------------------

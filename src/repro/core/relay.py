@@ -132,8 +132,14 @@ class KnowledgeRelay:
             if attempt > 0:
                 self.ledger.retries += 1
                 self.ledger.retransmit_bytes += nbytes
+                # capped exponential base, scaled by the plan's seeded
+                # jitter draw for THIS (transfer, attempt): retries across
+                # concurrent transfers spread out instead of thundering in
+                # lockstep, and replaying the same plan re-books the exact
+                # same latency (jitter is part of the schedule, not noise)
                 backoff = min(self.backoff_s * 2.0 ** (attempt - 1),
-                              self.backoff_cap_s)
+                              self.backoff_cap_s) \
+                    * (1.0 + plan.retry_jitter(tid, attempt))
                 self.cost = self.cost + RoundCost(
                     backoff, 0.0, 0.0, 0, 0, retries=1,
                     retransmit_bytes=nbytes)

@@ -84,6 +84,9 @@ class Request:
     domain: Optional[str] = None       # multi-tenant: AdapterBank slot owner
     deadline_s: Optional[float] = None  # wall-clock budget from submit time
     t_submit: float = 0.0              # submit wall time (deadline anchor)
+    speculative: bool = True           # opt this row out of spec drafting
+                                       # (it then decodes plainly THROUGH
+                                       # the verify pass — mixed waves)
 
 
 @dataclasses.dataclass
@@ -122,10 +125,17 @@ class EngineStats:
     padded_tokens: int = 0             # wasted slot-steps (retired/empty rows)
     timed_out: int = 0                 # requests retired at their deadline
     wall_s: float = 0.0
+    drafted: int = 0                   # drafter-proposed tokens (spec serving)
+    accepted: int = 0                  # proposals the verify pass committed
 
     @property
     def tok_per_s(self) -> float:
         return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def acceptance_rate(self) -> float:
+        """Committed fraction of drafted tokens (speculative serving)."""
+        return self.accepted / self.drafted if self.drafted else 0.0
 
     @property
     def utilization(self) -> float:
@@ -139,11 +149,27 @@ class DecodeEngine:
     """Packs queued requests into fixed slots and serves them ragged."""
 
     def __init__(self, cfg, *, slots: int = 8, greedy: bool = True,
-                 seed: int = 0, bank=None, mesh=None):
+                 seed: int = 0, bank=None, mesh=None, spec=None):
         self.cfg = cfg
         self.slots = slots
         self.greedy = greedy
         self.bank = bank                   # Optional[AdapterBank]: multi-tenant
+        # speculative serving: with a core.spec_decode.SpecDecoder, decode
+        # segments run draft->verify chunks (k proposals + ONE batched
+        # verify pass) instead of plain per-token scans. Greedy-only:
+        # acceptance is exact-match against the target argmax, which is
+        # what makes spec drains token-identical to plain ones. Rows
+        # submitted with speculative=False decode plainly THROUGH the
+        # verify pass (commit=1/chunk), so one wave freely mixes both.
+        self.spec = spec
+        if spec is not None:
+            if not greedy:
+                raise ValueError(
+                    "speculative serving is greedy-only (sampled residual "
+                    "acceptance is a recorded follow-up)")
+            spec.validate_target(cfg)
+            if mesh is not None:
+                self.spec = spec.place(mesh)
         # mesh-native waves: every fused dispatch (wave prefill / in-wave
         # refill / decode segment) traces under rules.serving_rules(), so
         # the wave batch shards over `data` and head/FF dims over `model`.
@@ -160,7 +186,8 @@ class DecodeEngine:
     def submit(self, tokens, max_new_tokens: int = 8,
                extras: Optional[dict] = None,
                domain: Optional[str] = None,
-               deadline_s: Optional[float] = None) -> int:
+               deadline_s: Optional[float] = None,
+               speculative: bool = True) -> int:
         """Enqueue one request; returns its uid. ``extras`` is one modality
         row per key (e.g. ``{"vision_embeds": (n_vis, d)}`` — no batch dim);
         it stays bound to this request across wave packing. ``domain`` names
@@ -168,6 +195,9 @@ class DecodeEngine:
         serving); it too stays bound across packing. ``deadline_s`` is a
         wall-clock budget from NOW: a row still live past it is retired
         mid-wave as a ``timed_out`` completion with its partial tokens.
+        ``speculative=False`` opts this row out of drafting on a spec
+        engine (it decodes plainly through the verify pass; ignored on
+        plain engines).
 
         Malformed requests fail HERE with ``ValueError`` — an empty or
         non-1-D prompt, a non-positive token budget, or an unknown domain
@@ -204,7 +234,8 @@ class DecodeEngine:
         uid = self._uid
         self._uid += 1
         self._queue.append(Request(uid, tokens, int(max_new_tokens), extras,
-                                   domain, deadline_s, time.time()))
+                                   domain, deadline_s, time.time(),
+                                   bool(speculative)))
         return uid
 
     def pending(self) -> int:
@@ -260,6 +291,8 @@ class DecodeEngine:
         bufs: list[list[np.ndarray]] = [[] for _ in range(B)]
         remaining = np.zeros(B, np.int64)
         tok = caches = pos = None
+        dtok = dcaches = dpos = None       # drafter wave state (spec serving)
+        spec_rows = np.ones(B, bool)       # per-slot speculative opt-in
         ids = None                         # device (B,) adapter slot ids
         cur_extras: list[Optional[dict]] = [None] * B
         cur_dom: list[Optional[str]] = [None] * B
@@ -272,6 +305,7 @@ class DecodeEngine:
                     slot_req[i], slot_wave[i] = req, stats.waves - 1
                     remaining[i] = req.max_new_tokens
                     cur_extras[i], cur_dom[i] = req.extras, req.domain
+                    spec_rows[i] = req.speculative
                 live = [i for i in range(B) if slot_req[i] is not None]
                 if tenant:                     # full-wave ids for segments
                     doms = [cur_dom[i] if cur_dom[i] is not None
@@ -296,6 +330,15 @@ class DecodeEngine:
                     tok, caches, pos = M._wave_prefill_fn(
                         self.cfg, cap, self.mesh)(
                         wp, batch, jnp.asarray(lens), ids)
+                    if self.spec is not None:
+                        # drafter rides the same wave: its own prefill
+                        # builds the recurrent draft state per row (its
+                        # next-token guess is discarded — the chunk carry
+                        # is always the target's committed token)
+                        dtok, dcaches, dpos = M._wave_prefill_fn(
+                            self.spec.cfg, cap, self.mesh)(
+                            self.spec.params, {"tokens": batch["tokens"]},
+                            jnp.asarray(lens), None)
                 else:
                     # in-wave refill: prefill ONLY the admitted rows
                     # (pow2-padded row count) and scatter them into the
@@ -321,6 +364,12 @@ class DecodeEngine:
                         self.cfg, cap, self.mesh)(
                         wp, batch, jnp.asarray(lens), jnp.asarray(row_idx),
                         tok, caches, pos, ids_rows)
+                    if self.spec is not None:
+                        dtok, dcaches, dpos = M._refill_fn(
+                            self.spec.cfg, cap, self.mesh)(
+                            self.spec.params, {"tokens": batch["tokens"]},
+                            jnp.asarray(lens), jnp.asarray(row_idx),
+                            dtok, dcaches, dpos, None)
             # deadline sweep: a live row past its wall-clock budget is
             # retired HERE, mid-wave, as a timed-out completion with the
             # tokens it has so far — over-budget rows never stall the drain
@@ -350,24 +399,50 @@ class DecodeEngine:
             # inside the scan idles finished rows either way; fewer
             # dispatches, identical padded_tokens).
             live_rem = remaining[remaining > 0]
-            seg = _pow2floor(int(live_rem.min() if self._queue
-                                 else live_rem.max()))
-            key = None
-            if not self.greedy:
-                self._key, key = jax.random.split(self._key)
-            toks, tok, caches, pos, _, key = M._segment_fn(
-                self.cfg, seg, self.greedy, self.mesh)(
-                self._wave_params(params, tenant), tok, caches, pos,
-                jnp.asarray(remaining, jnp.int32), key, ids)
-            toks = np.asarray(toks)            # device sync = segment done
-            if key is not None:
-                self._key = key                # carried per-step splits
+            if self.spec is not None:
+                # speculative segment: `chunks` draft->verify chunks, each
+                # committing 1..k+1 tokens per row. The chunk count is the
+                # pow2 floor of the budget in CHUNK units (worst case one
+                # committed token per chunk keeps every chunk useful), so
+                # the jit cache stays {1, 2, 4, ...} exactly like `seg`.
+                Tc = self.spec.k + 1
+                budget = int(live_rem.min() if self._queue
+                             else live_rem.max())
+                chunks = max(1, _pow2floor(max(1, budget // Tc)))
+                (toks, counts, dr, ac, tok, caches, dcaches, pos,
+                 _) = M._spec_segment_fn(
+                    self.cfg, self.spec.cfg, chunks, self.spec.k,
+                    self.mesh)(
+                    self._wave_params(params, tenant), self.spec.params,
+                    tok, caches, dcaches, pos,
+                    jnp.asarray(remaining, jnp.int32),
+                    jnp.asarray(spec_rows), ids)
+                toks = np.asarray(toks)        # device sync = segment done
+                counts = np.asarray(counts)    # per-row committed tokens
+                stats.drafted += int(dr)
+                stats.accepted += int(ac)
+                executed = chunks * Tc * B     # verify slot-steps run
+            else:
+                seg = _pow2floor(int(live_rem.min() if self._queue
+                                     else live_rem.max()))
+                key = None
+                if not self.greedy:
+                    self._key, key = jax.random.split(self._key)
+                toks, tok, caches, pos, _, key = M._segment_fn(
+                    self.cfg, seg, self.greedy, self.mesh)(
+                    self._wave_params(params, tenant), tok, caches, pos,
+                    jnp.asarray(remaining, jnp.int32), key, ids)
+                toks = np.asarray(toks)        # device sync = segment done
+                if key is not None:
+                    self._key = key            # carried per-step splits
+                counts = np.minimum(seg, remaining)
+                executed = seg * B
             stats.segments += 1
             served_now = 0
             for i in range(B):
                 if remaining[i] <= 0:
                     continue
-                served = min(seg, int(remaining[i]))
+                served = int(counts[i])
                 bufs[i].append(toks[i, :served])
                 remaining[i] -= served
                 served_now += served
@@ -381,7 +456,7 @@ class DecodeEngine:
                     slot_req[i] = None
                     self.slot_table[i].recycle()
             stats.tokens += served_now
-            stats.padded_tokens += seg * B - served_now
+            stats.padded_tokens += executed - served_now
         stats.wall_s = time.time() - t_all
         return out, stats
 

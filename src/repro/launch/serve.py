@@ -17,6 +17,14 @@ Decode-engine architecture (fast path first):
   packed into fixed batch slots, used by ``core/integrated.py::produce``.
 - ``--impl loop``: the legacy per-token Python loop (one host dispatch per
   token), kept as the benchmark baseline (benchmarks/decode_bench.py).
+- ``--impl spec``: speculative serving — the engine drains with a tiny
+  recurrent edge drafter (``core/spec_decode.py``): ``--draft-k`` proposed
+  tokens per chunk, verified by ONE batched target pass, exact-match
+  accepted with per-row rollback. Greedy output is token-for-token
+  identical to ``--impl scan``; the printed acceptance rate is the
+  measured draft quality (a fresh random drafter accepts near 0% — train
+  or distill one for real speedups; benchmarks/spec_bench.py shows the
+  acceptance=1.0 upper bound).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch vit-edge --reduced \
@@ -82,8 +90,10 @@ def main(argv=None):
     ap.add_argument("--adapters", default=None)
     ap.add_argument("--requests", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--impl", choices=("scan", "loop", "engine"),
+    ap.add_argument("--impl", choices=("scan", "loop", "engine", "spec"),
                     default="scan")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="--impl spec: drafted tokens per verify chunk")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -106,18 +116,29 @@ def main(argv=None):
             (args.batch, cfg.audio.n_audio_frames, cfg.d_model),
             jnp.dtype(cfg.dtype))}
 
-    if args.impl == "engine":
+    if args.impl in ("engine", "spec"):
         from repro.launch.engine import DecodeEngine
-        engine = DecodeEngine(cfg, slots=args.batch)
+        spec = None
+        if args.impl == "spec":
+            from repro.core.spec_decode import SpecDecoder
+            # fold, don't split: the prompt stream must stay identical to
+            # --impl engine/scan at the same seed (greedy spec serving is
+            # token-for-token the plain output, so rows must match too)
+            spec = SpecDecoder.init(cfg, jax.random.fold_in(key, 1337),
+                                    k=args.draft_k)
+        engine = DecodeEngine(cfg, slots=args.batch, spec=spec)
         for r in range(args.requests):
             key, sub = jax.random.split(key)
             prompts = jax.random.randint(sub, (args.batch, args.prompt_len),
                                          0, cfg.vocab_size, dtype=jnp.int32)
             toks, stats = engine.serve(params, np.asarray(prompts),
                                        gen=args.gen, extra_batch=extra)
+            acc = (f", acceptance {stats.acceptance_rate:.2f} "
+                   f"({stats.accepted}/{stats.drafted})"
+                   if spec is not None else "")
             print(f"[serve] round {r}: {stats.requests} requests, "
                   f"{stats.tokens} tokens in {stats.wall_s:.2f}s "
-                  f"({stats.tok_per_s:.1f} tok/s, {stats.waves} waves); "
+                  f"({stats.tok_per_s:.1f} tok/s, {stats.waves} waves{acc}); "
                   f"first row: {toks[0][:8]}")
         return
 

@@ -280,6 +280,92 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
     return y, new_cache
 
 
+def chunk_slots(qpos: jax.Array, window: int, S: int,
+                active: Optional[jax.Array] = None) -> jax.Array:
+    """Per-row cache slots a verify chunk writes (and rollback restores).
+
+    qpos: (B, T) absolute positions. Sliding-window caches write slot
+    ``pos % window``, full caches slot ``pos``; inactive rows are routed
+    out of bounds (``S``) so their scatters are dropped."""
+    slot = (qpos % window) if window and window > 0 else qpos
+    if active is not None:
+        slot = jnp.where(active[:, None], slot, S)
+    return slot
+
+
+def attention_verify(params: dict, adapters: Optional[dict], x: jax.Array,
+                     cache: dict, cfg: ModelConfig, *, pos: jax.Array,
+                     window: int = 0, use_rope: bool = True,
+                     adapter_ids: Optional[jax.Array] = None,
+                     active: Optional[jax.Array] = None):
+    """Speculative verify: a length-T token chunk per row against the LIVE
+    cache. x: (B, T, d) — row b's chunk occupies positions
+    ``pos[b] .. pos[b]+T-1``. Returns (out (B, T, d), new_cache).
+
+    The chunk's K/V are scattered into the cache first (per-row slots,
+    exactly the footprint of T consecutive ``attention_decode`` writes),
+    then every chunk query attends the updated cache under the shared
+    masking semantics (kernels/ref.py): prefix slots (pos < 0) always
+    visible, empty slots (+1e9 sentinel) never, sliding window per query
+    position. T is tiny (draft_k + 1), so the attention itself is plain
+    jnp GQA — ``flash_decode`` takes one query per row and
+    ``flash_attention``'s q_pos is per-block, not per-row; a real-TPU
+    verify kernel is a recorded ROADMAP follow-up.
+
+    Rejected draft positions leave K/V writes behind: callers must restore
+    the overwritten slots (core/spec_decode.py::rollback_caches) before
+    the next chunk. Inactive rows' writes are dropped out of bounds, so
+    retired rows' caches stay frozen through a speculative wave."""
+    B, T = x.shape[:2]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    lora = (adapters or {}).get("lora", {})
+    lscale = cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1)
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    qpos = pos[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]   # (B, T)
+
+    q = _proj(x, params["wq"], params.get("bq"), lora.get("q"), lscale,
+              adapter_ids).reshape(B, T, nh, hd)
+    k1 = _proj(x, params["wk"], params.get("bk"), lora.get("k"), lscale,
+               adapter_ids).reshape(B, T, nkv, hd)
+    v1 = _proj(x, params["wv"], params.get("bv"), lora.get("v"), lscale,
+               adapter_ids).reshape(B, T, nkv, hd)
+    if use_rope:
+        q = rope(q, qpos, cfg.rope_theta)
+        k1 = rope(k1, qpos, cfg.rope_theta)
+
+    S = cache["k"].shape[1]
+    slot = chunk_slots(qpos, window, S, active)
+    rows = jnp.arange(B)[:, None]
+    k = cache["k"].at[rows, slot].set(k1.astype(cache["k"].dtype),
+                                      mode="drop")
+    v = cache["v"].at[rows, slot].set(v1.astype(cache["v"].dtype),
+                                      mode="drop")
+    kv_pos = cache["pos"].at[rows, slot].set(qpos, mode="drop")
+    new_cache = {"k": k, "v": v, "pos": kv_pos}
+
+    k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    kp, vp, n_p = _with_prefix(k, v, adapters, B, adapter_ids)
+    if n_p:
+        kv_pos = jnp.concatenate(
+            [jnp.full((B, n_p), -1, jnp.int32), kv_pos], axis=1)
+
+    vis = kv_pos[:, None, :] <= qpos[:, :, None]            # causal (B, T, S)
+    if window and window > 0:
+        vis &= (qpos[:, :, None] - kv_pos[:, None, :]) < window
+    vis |= kv_pos[:, None, :] < 0                           # prefix slots
+    g = nh // nkv
+    qf = q.reshape(B, T, nkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("btngd,bsnd->bngts", qf,
+                        kp.astype(jnp.float32)) * (hd ** -0.5)
+    scores = jnp.where(vis[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bngts,bsnd->btngd", probs, vp.astype(jnp.float32))
+    o = o.reshape(B, T, nh * hd).astype(x.dtype)
+    y = _proj(o, params["wo"], None, lora.get("o"), lscale, adapter_ids)
+    return y, new_cache
+
+
 def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, *,
                window: int = 0, layers: Optional[int] = None) -> dict:
     """ParamSpec tree for a (stacked-over-layers) KV cache.

@@ -18,7 +18,8 @@ from repro.models import encdec
 from repro.models.layers import (cross_entropy, embed, embed_spec, rmsnorm,
                                  rmsnorm_spec, unembed)
 from repro.models.transformer import (adapter_stack_spec, cache_group_spec,
-                                      stack_decode, stack_seq, stack_spec)
+                                      rec_cache_part, stack_decode, stack_seq,
+                                      stack_spec, stack_verify)
 from repro.sharding.rules import (ParamSpec, init_from_spec, serving_rules,
                                   shard, use_rules)
 
@@ -244,7 +245,8 @@ def prefill(params: dict, batch: dict, cfg: ModelConfig,
 
 
 def _scan_steps(params: dict, cfg: ModelConfig, steps: int, greedy: bool,
-                tok, caches, pos, remaining, key, adapter_ids):
+                tok, caches, pos, remaining, key, adapter_ids,
+                with_state: bool = False):
     """Scan ``steps`` decode steps with per-row positions and retirement.
 
     The carry is (token, caches, pos (B,), remaining (B,), key); each step
@@ -253,7 +255,13 @@ def _scan_steps(params: dict, cfg: ModelConfig, steps: int, greedy: bool,
     position and carried token freeze, and their emitted tokens are
     padding the caller discards — so a retired row costs the step's FLOPs
     (counted by the engine as ``padded_tokens``) but cannot perturb its
-    own or any other row's generation."""
+    own or any other row's generation.
+
+    ``with_state`` additionally emits the post-step recurrent cache parts
+    (transformer.rec_cache_part) per step — the drafter in speculative
+    decoding IS this scan: step j's snapshot is the drafter state after
+    processing chunk offset j, the exact rollback points spec_decode
+    needs. Returns (toks (B, steps), carry[, snaps (L, B, steps, ...)])."""
 
     def step(carry, _):
         tok, caches, pos, remaining, key = carry
@@ -268,11 +276,16 @@ def _scan_steps(params: dict, cfg: ModelConfig, steps: int, greedy: bool,
         nxt = jnp.where(active[:, None], nxt.astype(jnp.int32), tok)
         pos = pos + active.astype(jnp.int32)
         remaining = remaining - active.astype(jnp.int32)
-        return (nxt, caches, pos, remaining, key), tok
+        ys = (tok, rec_cache_part(caches)) if with_state else tok
+        return (nxt, caches, pos, remaining, key), ys
 
-    carry, toks = jax.lax.scan(step, (tok, caches, pos, remaining, key),
-                               None, length=steps)
-    return jnp.swapaxes(toks[..., 0], 0, 1), carry         # (B, steps), carry
+    carry, ys = jax.lax.scan(step, (tok, caches, pos, remaining, key),
+                             None, length=steps)
+    if with_state:
+        toks, snaps = ys
+        snaps = jax.tree.map(lambda s: jnp.moveaxis(s, 0, 2), snaps)
+        return jnp.swapaxes(toks[..., 0], 0, 1), carry, snaps
+    return jnp.swapaxes(ys[..., 0], 0, 1), carry           # (B, steps), carry
 
 
 def _prefill_state(params: dict, batch: dict, cfg: ModelConfig, cap: int,
@@ -364,6 +377,74 @@ def _segment_fn(cfg: ModelConfig, steps: int, greedy: bool, mesh=None):
                 params, cfg, steps, greedy, tok, caches, pos, remaining, key,
                 adapter_ids)
             return toks, tok, caches, pos, remaining, key
+
+    return jax.jit(impl)
+
+
+# Fused-fn cache-key audit (speculative decoding landing draft_k):
+# every trace-shaping argument must appear in the lru key, and ONLY
+# trace-shaping arguments (a spurious key arg would fork identical jits).
+#   _wave_prefill_fn(cfg, cap)            cap pads caches; prompt width is
+#                                         a jit shape, not a key
+#   _refill_fn(cfg, cap)                  same
+#   _segment_fn(cfg, steps, greedy)       steps is the scan length, greedy
+#                                         picks the sampling branch —
+#                                         draft_k never reaches this fn
+#   _draft_fn(dcfg, k)                    k+1 is the draft scan length
+#   _verify_fn(cfg)                       chunk width T is a jit shape —
+#                                         k is deliberately NOT in the key
+#   _spec_segment_fn(cfg, dcfg, chunks, k)  chunks is the chunk-scan
+#                                         length, k sizes every chunk
+# (+ mesh in all of the above: it selects the sharding rule context).
+# tests/test_spec_decode.py sweeps draft_k and asserts the caches stay
+# bounded by exactly these key tuples.
+
+
+@functools.lru_cache(maxsize=64)
+def _draft_fn(dcfg: ModelConfig, k: int, mesh=None):
+    """Jitted draft segment: k+1 scanned greedy drafter steps.
+
+    The drafter processes [carry_tok, d1..dk] — one step more than it
+    proposes — so its per-step state snapshots cover every rollback point
+    a chunk can commit to (0..k accepted drafts). Returns (drafts (B, k),
+    final drafter caches, per-step recurrent snapshots)."""
+
+    from repro.core import spec_decode as sd                # lazy: no cycle
+
+    def impl(dparams, tok, dcaches, pos, active):
+        with _wave_rules(mesh):
+            return sd.draft_chunk(dparams, dcfg, k, tok, dcaches, pos,
+                                  active)
+
+    return jax.jit(impl)
+
+
+@functools.lru_cache(maxsize=64)
+def _verify_fn(cfg: ModelConfig, mesh=None):
+    """Jitted one-pass chunk verify (see verify_step)."""
+
+    def impl(params, tokens, caches, pos, active, adapter_ids):
+        with _wave_rules(mesh):
+            return verify_step(params, tokens, caches, pos, cfg,
+                               adapter_ids=adapter_ids, active=active)
+
+    return jax.jit(impl)
+
+
+@functools.lru_cache(maxsize=64)
+def _spec_segment_fn(cfg: ModelConfig, dcfg: ModelConfig, chunks: int,
+                     k: int, mesh=None):
+    """Jitted speculative decode segment: ``chunks`` scanned draft+verify
+    chunks of a ragged wave (core/spec_decode.py::spec_segment). Chunk
+    counts are pow2-bucketed by the engine, mirroring _segment_fn."""
+    from repro.core import spec_decode as sd                # lazy: no cycle
+
+    def impl(params, dparams, tok, caches, dcaches, pos, remaining,
+             spec_rows, adapter_ids):
+        with _wave_rules(mesh):
+            return sd.spec_segment(params, dparams, cfg, dcfg, chunks, k,
+                                   tok, caches, dcaches, pos, remaining,
+                                   spec_rows, adapter_ids, mesh=mesh)
 
     return jax.jit(impl)
 
@@ -472,3 +553,32 @@ def decode_step(params: dict, token: jax.Array, caches: dict,
     head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
     logits = unembed(head_tbl, x)
     return logits, caches
+
+
+def verify_step(params: dict, tokens: jax.Array, caches: dict,
+                pos: jax.Array, cfg: ModelConfig,
+                adapter_ids: Optional[jax.Array] = None,
+                active: Optional[jax.Array] = None):
+    """Speculative verify: run the target model over a whole draft chunk in
+    ONE pass against the live caches. tokens: (B, T) int32 — row b's chunk
+    sits at positions ``pos[b] .. pos[b]+T-1``. Returns (logits (B, T,
+    vocab), new_caches, rec_snaps); ``logits[:, j]`` is the distribution
+    AFTER processing chunk offset j, so greedy targets are
+    ``argmax(logits, -1)``. ``new_caches`` assumes full acceptance and
+    ``rec_snaps`` carries per-step recurrent state — both feed
+    core/spec_decode.py::rollback_caches, which is mandatory before the
+    next chunk (see stack_verify)."""
+    if cfg.family in ("audio", "vlm"):
+        raise NotImplementedError(
+            f"speculative verify not supported for family={cfg.family!r}")
+    adapters = params.get("adapters", {}).get("stack", {})
+    B = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    x = embed(params["backbone"]["embed"], tokens)
+    x = shard(x, "batch", "seq", "d_model")
+    x, caches, snaps = stack_verify(params["backbone"]["layers"], adapters,
+                                    x, caches, cfg, pos=pos,
+                                    adapter_ids=adapter_ids, active=active)
+    x = rmsnorm(params["backbone"]["final_norm"], x)
+    head_tbl = params["backbone"].get("lm_head", params["backbone"]["embed"])
+    return unembed(head_tbl, x), caches, snaps

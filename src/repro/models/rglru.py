@@ -105,6 +105,21 @@ def rglru_decode(params: dict, adapters: Optional[dict], x: jax.Array,
     return out, {"h": h, "conv": conv_in[:, 1:]}
 
 
+def rglru_verify(params: dict, adapters: Optional[dict], x: jax.Array,
+                 cache: dict, cfg: ModelConfig):
+    """T chained single-token steps (bitwise ``rglru_decode`` math) emitting
+    per-step state snapshots for speculative rollback. x: (B, T, d).
+    Returns (y (B, T, d), snaps {'h': (B, T, W), 'conv': (B, T, K-1, W)})."""
+    def step(c, xt):
+        y, c = rglru_decode(params, adapters, xt, c, cfg)
+        return c, (y, c)
+
+    xs = jnp.swapaxes(x, 0, 1)[:, :, None]                 # (T, B, 1, d)
+    _, (ys, snaps) = jax.lax.scan(step, cache, xs)
+    y = jnp.swapaxes(ys[:, :, 0], 0, 1)                    # (B, T, d)
+    return y, jax.tree.map(lambda s: jnp.swapaxes(s, 0, 1), snaps)
+
+
 def rglru_cache_spec(cfg: ModelConfig, batch: int, layers: int) -> dict:
     w, K = cfg.lru_width, cfg.hybrid.conv_width
     return {

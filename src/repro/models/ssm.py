@@ -146,6 +146,25 @@ def ssm_decode(params: dict, adapters: Optional[dict], x: jax.Array,
     return out, {"h": h, "conv": conv_in[:, 1:]}
 
 
+def ssm_verify(params: dict, adapters: Optional[dict], x: jax.Array,
+               cache: dict, cfg: ModelConfig):
+    """T chained single-token steps (bitwise ``ssm_decode`` math) emitting a
+    per-step state snapshot for speculative rollback.
+
+    x: (B, T, d). Returns (y (B, T, d), snaps {'h': (B, T, Di, N),
+    'conv': (B, T, K-1, Di)}) — ``snaps[:, t]`` is the cache after
+    processing chunk offset t; the would-be full-acceptance cache is
+    ``snaps[:, -1]``."""
+    def step(c, xt):
+        y, c = ssm_decode(params, adapters, xt, c, cfg)
+        return c, (y, c)
+
+    xs = jnp.swapaxes(x, 0, 1)[:, :, None]                 # (T, B, 1, d)
+    _, (ys, snaps) = jax.lax.scan(step, cache, xs)
+    y = jnp.swapaxes(ys[:, :, 0], 0, 1)                    # (B, T, d)
+    return y, jax.tree.map(lambda s: jnp.swapaxes(s, 0, 1), snaps)
+
+
 def ssm_cache_spec(cfg: ModelConfig, batch: int, layers: Optional[int] = None) -> dict:
     L = layers if layers is not None else cfg.n_layers
     di, ds, K = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv

@@ -318,6 +318,78 @@ def stack_decode(params: dict, adapters: dict, x: jax.Array,
     return x, new_caches
 
 
+def rec_cache_part(caches: dict) -> dict:
+    """The recurrent ({'h','conv'}) sub-trees of a decode-cache tree — the
+    part speculative decoding snapshots per step for rollback (attention
+    caches, which carry a 'pos' leaf, roll back by slot restore instead)."""
+    return {g: {s: c for s, c in grp.items() if "pos" not in c}
+            for g, grp in caches.items()}
+
+
+def stack_verify(params: dict, adapters: dict, x: jax.Array, caches: dict,
+                 cfg: ModelConfig, *, pos: jax.Array, adapter_ids=None,
+                 active=None):
+    """Length-T chunk step through all groups (speculative verify).
+
+    Like ``stack_decode`` but processes a whole draft chunk per row in one
+    pass: attention sub-layers scatter the chunk's K/V then attend the
+    updated cache (attention_verify — ONE cache read for T tokens, the
+    speculative win); recurrent sub-layers chain T exact decode steps and
+    emit per-step state snapshots. Returns (x, new_caches, rec_snaps):
+    ``rec_snaps`` mirrors :func:`rec_cache_part` with a per-step axis at
+    dim 2 ((L, B, T, ...)); ``new_caches`` assumes FULL acceptance —
+    core/spec_decode.py::rollback_caches restores each row to its accepted
+    length (and freezes inactive rows' recurrent state, which this pass
+    advances unconditionally)."""
+    new_caches: dict = {}
+    snaps: dict = {}
+    for name, kinds, n in groups_for(cfg):
+        gp, ga = params[name], adapters.get(name, {})
+        gc = caches[name]
+
+        def body(x, layer):
+            lp, la, lc = layer
+            new_lc, snap_lc = {}, {}
+            for i, k in enumerate(kinds):
+                key = f"s{i}"
+                p_, a_ = lp[key], la.get(key, {})
+                if k == "ssm":
+                    h, s = ssm_mod.ssm_verify(p_["mix"], a_,
+                                              rmsnorm(p_["ln1"], x),
+                                              lc[key], cfg)
+                    x = x + h
+                elif k == "rglru":
+                    h, s = rglru_mod.rglru_verify(p_["mix"], a_,
+                                                  rmsnorm(p_["ln1"], x),
+                                                  lc[key], cfg)
+                    x = x + h
+                    x = x + mlp(p_["mlp"], rmsnorm(p_["ln2"], x))
+                else:
+                    w = attn_window(cfg, k)
+                    h, c = attn_mod.attention_verify(
+                        p_["attn"], a_, rmsnorm(p_["ln1"], x), lc[key], cfg,
+                        pos=pos, window=w, adapter_ids=adapter_ids,
+                        active=active)
+                    x = x + h
+                    if k == "moe":
+                        h2, _ = moe_apply(p_["moe"], rmsnorm(p_["ln2"], x),
+                                          cfg)
+                    else:
+                        h2 = mlp(p_["mlp"], rmsnorm(p_["ln2"], x))
+                    x = x + h2
+                    new_lc[key], snap_lc[key] = c, {}
+                    continue
+                new_lc[key] = jax.tree.map(lambda t: t[:, -1], s)
+                snap_lc[key] = s
+            return x, (new_lc, snap_lc)
+
+        x, (new_gc, snap_gc) = jax.lax.scan(
+            body, x, (gp, ga if ga else _empty_like(gp, n), gc))
+        new_caches[name] = new_gc
+        snaps[name] = snap_gc
+    return x, new_caches, snaps
+
+
 def _empty_like(gp, n: int):
     """Zero-leaf pytree scannable alongside params when no adapters exist."""
     return {}

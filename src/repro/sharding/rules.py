@@ -108,6 +108,21 @@ def serving_rules() -> dict[str, Any]:
     return r
 
 
+def drafter_rules() -> dict[str, Any]:
+    """Speculative-decoding drafter rules: weights fully REPLICATED.
+
+    The drafter is tiny — sharding its weights over `model` would trade a
+    collective per draft step for negligible memory, and every device
+    needs the whole drafter to propose for its local batch shard anyway.
+    Activation batch dims keep the wave sharding over (`pod`, `data`)
+    (the target's verify pass rides serving_rules unchanged); every other
+    logical axis resolves to replicated.
+    """
+    keep = {"batch", "cluster", "slots"}
+    return {k: (DEFAULT_RULES[k] if k in keep else None)
+            for k in DEFAULT_RULES}
+
+
 def train_rules(family: str) -> dict[str, Any]:
     """Per-family training rules (DESIGN.md §4 / EXPERIMENTS.md §Dry-run).
 

@@ -307,6 +307,45 @@ class TestLossyRelay:
         assert r.cost.latency_s >= clean.cost.latency_s + \
             0.25 * r.ledger.retries * 0.99  # capped exp backoff >= base each
 
+    def test_backoff_jitter_is_seeded_and_replayable(self):
+        """Retry backoff carries a per-(transfer, attempt) jitter draw from
+        the plan's SeedSequence: replaying the same plan books the exact
+        same latency; a different seed books a different one. The jitter
+        is multiplicative in [1, 2) so it never undercuts the base delay."""
+        def run(seed):
+            plan = FaultPlan(seed=seed, link_loss=0.5)
+            r = KnowledgeRelay(self._adapters(), ["a"], faults=plan,
+                               max_retries=50, backoff_s=0.25,
+                               backoff_cap_s=1.0)
+            for _ in range(5):
+                r.cloud_deliver("a")
+            return r
+        a, b, c = run(3), run(3), run(11)
+        assert a.ledger.retries > 0
+        assert a.cost.latency_s == b.cost.latency_s      # exact replay
+        assert a.ledger.retries == b.ledger.retries
+        assert a.cost.latency_s != c.cost.latency_s      # seed matters
+        # raw draws are deterministic, in [0, 1), and distinct across
+        # attempts (the de-synchronization the jitter exists for)
+        plan = FaultPlan(seed=3, link_loss=0.5)
+        d1 = [plan.retry_jitter(0, i) for i in range(4)]
+        d2 = [plan.retry_jitter(0, i) for i in range(4)]
+        assert d1 == d2
+        assert all(0.0 <= u < 1.0 for u in d1)
+        assert len(set(d1)) == len(d1)
+
+    def test_inactive_plan_books_no_jitter(self):
+        """The all-off plan takes the exact pre-jitter happy path: booked
+        cost is bitwise identical to running with no plan at all."""
+        off = KnowledgeRelay(self._adapters(), ["a"],
+                             faults=FaultPlan(seed=0))
+        none = KnowledgeRelay(self._adapters(), ["a"])
+        for _ in range(3):
+            off.cloud_deliver("a")
+            none.cloud_deliver("a")
+        assert off.cost.latency_s == none.cost.latency_s
+        assert off.ledger.retries == 0 and off.cost.retries == 0
+
 
 # ---------------------------------------------------------------------------
 # Last-known-good serving

@@ -1,0 +1,233 @@
+"""Edge-drafted speculative decoding: greedy parity, acceptance
+accounting at the forced extremes (0% and 100%), mixed spec/plain waves,
+and the model.py fused-fn jit-cache key audit (draft_k sweep)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.spec_decode import (SpecDecoder, drafter_config,
+                                    spec_generate)
+from repro.launch.engine import DecodeEngine
+from repro.models import model as M
+
+
+def _cfg(name):
+    return get_config(name).reduced().with_(dtype="float32", vocab_size=64)
+
+
+def _prompts(key, n, s, vocab=64):
+    return np.asarray(jax.random.randint(key, (n, s), 1, vocab,
+                                         dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Greedy parity: spec output must be token-for-token the plain output
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["vit-edge", "falcon-mamba-7b",
+                                  "recurrentgemma-2b"])
+def test_spec_generate_matches_generate_scan(name):
+    """Exact-match acceptance + per-row rollback == plain greedy decoding,
+    for every cache family (full attention, ssm state, sliding-window
+    hybrid)."""
+    cfg = _cfg(name)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    spec = SpecDecoder.init(cfg, jax.random.PRNGKey(7), k=3)
+    prompts = _prompts(jax.random.PRNGKey(1), 3, 12)
+    ref = np.asarray(M.generate_scan(params, cfg, jnp.asarray(prompts),
+                                     gen=11))
+    out, stats = spec_generate(params, cfg, spec, prompts, gen=11)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    # every chunk commits at least the verified carry token
+    assert stats.drafted > 0
+    assert 0 <= stats.accepted <= stats.drafted
+
+
+def test_spec_generate_ragged_and_mixed_rows():
+    """Ragged prompt lengths + per-row speculative opt-out share one wave;
+    opted-out rows decode plainly THROUGH the verify pass and stay exact."""
+    cfg = _cfg("recurrentgemma-2b")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    spec = SpecDecoder.init(cfg, jax.random.PRNGKey(7), k=3)
+    prompts = np.array(_prompts(jax.random.PRNGKey(2), 4, 10))
+    lens = np.asarray([10, 6, 8, 3], np.int32)
+    for i, n in enumerate(lens):
+        prompts[i, n:] = 0
+    rows = np.asarray([True, False, True, False])
+    refs = [np.asarray(M.generate_scan(
+        params, cfg, jnp.asarray(prompts[i:i + 1, :lens[i]]), gen=9))[0]
+        for i in range(4)]
+    out, stats = spec_generate(params, cfg, spec, prompts, gen=9,
+                               prompt_lens=lens, spec_rows=rows)
+    np.testing.assert_array_equal(np.asarray(out), np.stack(refs))
+    # plain rows draft nothing: only the 2 opted-in rows book proposals
+    assert stats.drafted > 0
+
+
+# ---------------------------------------------------------------------------
+# Acceptance accounting at the forced extremes
+# ---------------------------------------------------------------------------
+
+
+def test_identical_drafter_accepts_everything():
+    """Drafter == target (same ssm weights) must accept every proposal:
+    acceptance_rate is exactly accepted/drafted == 1.0, and throughput
+    collapses to one verify pass per k+1 tokens."""
+    cfg = _cfg("falcon-mamba-7b")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    spec = SpecDecoder(cfg, params, k=3)      # the target IS the drafter
+    prompts = _prompts(jax.random.PRNGKey(3), 2, 8)
+    gen = 8                                    # 2 chunks of k+1 per row
+    ref = np.asarray(M.generate_scan(params, cfg, jnp.asarray(prompts),
+                                     gen=gen))
+    out, stats = spec_generate(params, cfg, spec, prompts, gen=gen)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    assert stats.accepted == stats.drafted > 0
+    assert stats.acceptance_rate == 1.0
+
+
+def _disagreeing_pair():
+    """(target params, SpecDecoder) rigged for 0% acceptance.
+
+    Zeroed target: every logit 0, argmax always token 0. Rigged drafter
+    (d_model == vocab == 64): zeroed layers pass the residual through, so
+    the final-norm output is a positive multiple of e_tok; the rolled
+    lm_head then puts all mass on tok+1. Drafts from any carry t < 60 are
+    t+1, t+2, ... — never 0 — so the verify pass rejects every proposal."""
+    cfg = _cfg("vit-edge")
+    params = jax.tree.map(jnp.zeros_like, M.init(cfg, jax.random.PRNGKey(0)))
+    dcfg = drafter_config(cfg)
+    dp = jax.tree.map(jnp.zeros_like, M.init(dcfg, jax.random.PRNGKey(1)))
+    eye = jnp.eye(64, dtype=jnp.float32)
+    dp["backbone"]["embed"]["table"] = 5.0 * eye
+    dp["backbone"]["final_norm"]["scale"] = jnp.ones(64, jnp.float32)
+    dp["backbone"]["lm_head"]["table"] = 5.0 * jnp.roll(eye, 1, axis=0)
+    return cfg, params, SpecDecoder(dcfg, dp, k=3)
+
+
+def test_forced_disagreement_accepts_nothing():
+    """Guaranteed progress under a pathological drafter: every chunk
+    commits exactly the 1 verified carry token, accepted == 0, and the
+    booked drafted count is exactly k per chunk per row."""
+    cfg, params, spec = _disagreeing_pair()
+    B, gen = 2, 6
+    prompts = _prompts(jax.random.PRNGKey(4), B, 5, vocab=50)
+    ref = np.asarray(M.generate_scan(params, cfg, jnp.asarray(prompts),
+                                     gen=gen))
+    assert (ref == 0).all()                    # zeroed target: argmax 0
+    out, stats = spec_generate(params, cfg, spec, prompts, gen=gen)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+    assert stats.accepted == 0
+    assert stats.acceptance_rate == 0.0
+    # commit=1/chunk -> gen chunks per row, k drafts booked per chunk
+    assert stats.drafted == B * gen * spec.k
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: spec drains == plain drains, mixed waves == solo
+# ---------------------------------------------------------------------------
+
+
+def test_engine_spec_serving_matches_plain():
+    cfg = _cfg("vit-edge")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    spec = SpecDecoder.init(cfg, jax.random.PRNGKey(7), k=3)
+    prompts = _prompts(jax.random.PRNGKey(5), 5, 12)
+    plain = DecodeEngine(cfg, slots=3)
+    eng = DecodeEngine(cfg, slots=3, spec=spec)
+    ref, _ = plain.serve(params, prompts, gen=7)
+    out, stats = eng.serve(params, prompts, gen=7)
+    np.testing.assert_array_equal(out, ref)
+    assert stats.requests == 5
+    assert stats.tokens == 35
+    assert stats.drafted > 0
+    assert stats.acceptance_rate == stats.accepted / stats.drafted
+    # padded_tokens now counts verify slot-steps beyond served tokens
+    assert stats.utilization <= 1.0
+
+
+def test_engine_mixed_spec_plain_wave_matches_solo():
+    """One drain freely mixing speculative and plain rows (ragged budgets
+    included) must serve every request its solo tokens."""
+    cfg = _cfg("recurrentgemma-2b")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    spec = SpecDecoder.init(cfg, jax.random.PRNGKey(7), k=3)
+    eng = DecodeEngine(cfg, slots=3, spec=spec)
+    prompts = _prompts(jax.random.PRNGKey(6), 5, 9)
+    gens = [8, 5, 11, 6, 9]
+    uids = [eng.submit(p, g, speculative=(i % 2 == 0))
+            for i, (p, g) in enumerate(zip(prompts, gens))]
+    comps, stats = eng.run(params)
+    by = {c.uid: c.tokens for c in comps}
+    for p, g, u in zip(prompts, gens, uids):
+        solo = np.asarray(M.generate_scan(params, cfg,
+                                          jnp.asarray(p[None, :]), gen=g))
+        np.testing.assert_array_equal(by[u], solo[0])
+    assert stats.drafted > 0                   # the spec rows drafted
+    assert stats.tokens == sum(gens)
+
+
+def test_engine_spec_rejects_sampling():
+    cfg = _cfg("vit-edge")
+    spec = SpecDecoder.init(cfg, jax.random.PRNGKey(7), k=2)
+    with pytest.raises(ValueError, match="greedy-only"):
+        DecodeEngine(cfg, greedy=False, spec=spec)
+
+
+def test_validate_target_guards():
+    cfg = _cfg("vit-edge")
+    spec = SpecDecoder.init(cfg, jax.random.PRNGKey(7), k=2)
+    with pytest.raises(NotImplementedError, match="audio"):
+        spec.validate_target(_cfg("whisper-small"))
+    with pytest.raises(ValueError, match="vocab"):
+        spec.validate_target(cfg.with_(vocab_size=32))
+    # sliding-window wrap guard: chunk may not exceed the rolling buffer
+    win = _cfg("recurrentgemma-2b")
+    big = SpecDecoder.init(win, jax.random.PRNGKey(7), k=64)
+    with pytest.raises(ValueError, match="sliding window"):
+        big.validate_target(win)
+    with pytest.raises(ValueError, match="k=0"):
+        SpecDecoder.init(cfg, jax.random.PRNGKey(7), k=0)
+
+
+# ---------------------------------------------------------------------------
+# jit-cache key audit: draft_k sweep keeps every fused-fn cache bounded
+# ---------------------------------------------------------------------------
+
+
+def test_fused_fn_caches_bounded_by_draft_k_sweep():
+    """Sweeping k must grow _draft_fn by one entry per k (k+1 is the scan
+    length -> k IS a trace shape) and _verify_fn by at most one entry
+    total (T is the traced shape; k is deliberately NOT in its key).
+    See the cache-key audit block in models/model.py."""
+    cfg = _cfg("falcon-mamba-7b")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    dcfg = drafter_config(cfg)
+    dparams = M.init(dcfg, jax.random.PRNGKey(1))
+    d0 = M._draft_fn.cache_info().currsize
+    v0 = M._verify_fn.cache_info().currsize
+    s0 = M._spec_segment_fn.cache_info().currsize
+    ks = [1, 2, 3]
+    for k in ks:
+        M._draft_fn(dcfg, k)
+        M._verify_fn(cfg)
+        spec = SpecDecoder(dcfg, dparams, k=k)
+        prompts = _prompts(jax.random.PRNGKey(k), 2, 6)
+        spec_generate(params, cfg, spec, prompts, gen=4)
+    assert M._draft_fn.cache_info().currsize - d0 == len(ks)
+    assert M._verify_fn.cache_info().currsize - v0 <= 1
+    # one segment fn per distinct (chunks, k) actually dispatched; the
+    # sweep above uses gen=4 so chunks stays pow2-bucketed and small
+    grew = M._spec_segment_fn.cache_info().currsize - s0
+    assert 0 < grew <= 2 * len(ks)
+    # repeating the sweep is all cache hits: no new entries
+    for k in ks:
+        M._draft_fn(dcfg, k)
+        M._verify_fn(cfg)
+    assert M._draft_fn.cache_info().currsize - d0 == len(ks)
+    assert M._verify_fn.cache_info().currsize - v0 <= 1
