@@ -1,0 +1,132 @@
+"""Telemetry overhead benchmark: the disabled path must be free.
+
+The telemetry layer (core/telemetry.py) rides inside the decode engine's
+drain loop and the HFSL round path, so its cost model is the whole design:
+disabled (the default) every hook must collapse to one attribute check,
+and enabled it must stay cheap enough to leave on in CI smokes.
+
+Emits ``name,us_per_call,derived`` rows:
+
+- ``telemetry_noop_call``      — empty-function-call floor (the baseline
+  every hook is compared against).
+- ``telemetry_disabled_count`` / ``_observe`` / ``_span`` — per-hook cost
+  with telemetry OFF; ``overhead_ns`` is the delta vs the no-op floor and
+  should be within noise of zero (a handful of ns for the guard check).
+- ``telemetry_enabled_count`` / ``_observe`` / ``_span`` — the real
+  recording cost with telemetry ON.
+- ``telemetry_drain_overhead`` — end-to-end: a small ragged engine drain
+  with telemetry off vs on; derived reports both tok/s and the relative
+  wall-time delta (expected ~0: a drain records a few dozen events
+  against seconds of device work).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import telemetry
+from repro.core.telemetry import Telemetry
+from repro.configs.base import get_config
+from repro.launch.engine import DecodeEngine
+from repro.models import model as M
+
+
+def _per_call_ns(fn, n: int, repeat: int = 5) -> float:
+    """Best-of-``repeat`` mean ns/call over ``n`` calls."""
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(n):
+            fn()
+        best = min(best, time.perf_counter() - t0)
+    return best / n * 1e9
+
+
+def _noop():
+    pass
+
+
+def _drain(params, cfg, trace, slots, tel):
+    engine = DecodeEngine(cfg, slots=slots, tel=tel)
+    for toks, g in trace:
+        engine.submit(toks, g)
+    _, stats = engine.run(params)
+    return stats
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--calls", type=int, default=200_000)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--repeat", type=int, default=3)
+    # benchmarks/run.py imports main() with argv=None -> defaults
+    args = ap.parse_args([] if argv is None else argv)
+    n = args.calls
+
+    floor = _per_call_ns(_noop, n)
+    emit("telemetry_noop_call", floor * 1e-3, "baseline=1")
+
+    off = Telemetry(enabled=False)
+    on = Telemetry(enabled=True)
+    results = {"floor_ns": floor}
+    for mode, tel in (("disabled", off), ("enabled", on)):
+        def span_hook(t=tel):
+            with t.span("bench.s"):
+                pass
+
+        hooks = {
+            "count": lambda t=tel: t.count("bench.c"),
+            "observe": lambda t=tel: t.observe("bench.h", 0.5),
+            "span": span_hook,
+        }
+        for hook, fn in hooks.items():
+            ns = _per_call_ns(fn, n)
+            results[f"{mode}_{hook}_ns"] = ns
+            emit(f"telemetry_{mode}_{hook}", ns * 1e-3,
+                 f"overhead_ns={ns - floor:.1f}")
+        tel.reset()
+
+    # end-to-end: the same ragged drain with telemetry off vs on
+    cfg = get_config("qwen2-7b").reduced().with_(dtype="float32")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    trace = [(rng.integers(0, cfg.vocab_size, 6 + 3 * (i % 4))
+              .astype(np.int32), [4, 8, 2, 6][i % 4])
+             for i in range(args.requests)]
+    ntok = sum(g for _, g in trace)
+
+    def best_of(tel):
+        _drain(params, cfg, trace, args.slots, tel)   # warmup / compile
+        best = float("inf")
+        for _ in range(max(args.repeat, 1)):
+            if tel is not None:
+                tel.reset()
+            t0 = time.perf_counter()
+            _drain(params, cfg, trace, args.slots, tel)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_off = best_of(Telemetry(enabled=False))
+    t_on = best_of(Telemetry(enabled=True))
+    delta = (t_on - t_off) / t_off
+    results.update({"drain_off_s": t_off, "drain_on_s": t_on,
+                    "drain_delta": delta})
+    emit("telemetry_drain_overhead", (t_on - t_off) * 1e6,
+         f"off_tok_s={ntok / t_off:.1f};on_tok_s={ntok / t_on:.1f};"
+         f"delta={delta * 100:+.1f}%")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    out = main(sys.argv[1:])
+    print(f"# disabled-span overhead vs no-op call: "
+          f"{out['disabled_span_ns'] - out['floor_ns']:.1f} ns; "
+          f"enabled span: {out['enabled_span_ns']:.0f} ns; "
+          f"drain delta {out['drain_delta'] * 100:+.1f}%")

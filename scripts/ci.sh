@@ -179,3 +179,42 @@ PY
 # train-to-serve loop, lives in tests/test_mesh_sharding.py).
 python -m benchmarks.shard_bench
 echo "[ci] host-device mesh smoke OK (sharded drain + sharded HFSL round parity)"
+
+# Telemetry smoke: trace one mixed-domain drain + one HFSL upgrade round
+# end-to-end and check the exported Chrome trace parses and contains the
+# request-lifecycle, segment, round-dispatch, and bank-publish spans the
+# observability layer promises (the full sweep: tests/test_telemetry.py).
+python - <<'PY'
+import dataclasses, json, tempfile, os
+import numpy as np
+from repro.configs.base import get_config
+from repro.core import telemetry
+from repro.core.integrated import IntegratedRuntime
+from repro.data.synthetic import ClassificationTask
+
+cfg = get_config("vit-edge").reduced().with_(dtype="float32", vocab_size=64)
+cfg = cfg.with_(peft=dataclasses.replace(cfg.peft, head_dim_out=5))
+tasks = {n: ClassificationTask(5, 64, 16, seed=i)
+         for i, n in enumerate(["nlp", "cv"])}
+tel = telemetry.enable()
+rt = IntegratedRuntime(cfg, tasks, n_clusters=2, steps_per_upgrade=2,
+                       batch=4, sync_every=2, serve_batch=8, serve_gen=2,
+                       serve_slots=4, seed=0)
+rt.upgrade("nlp")
+rt.produce(["nlp", "cv"])
+telemetry.disable()
+
+path = os.path.join(tempfile.mkdtemp(), "trace.json")
+n = tel.export_trace(path)
+doc = json.load(open(path))
+names = {e["name"] for e in doc["traceEvents"] if e.get("ph") == "X"}
+for want in ("engine.prefill", "engine.segment", "engine.request",
+             "engine.drain", "hfsl.round_dispatch", "bank.publish",
+             "integrated.upgrade", "integrated.produce"):
+    assert want in names, f"trace missing span {want!r} (got {sorted(names)})"
+assert n == sum(1 for e in doc["traceEvents"] if e.get("ph") == "X")
+assert tel.counters["engine.retired"] == 8
+assert tel.hist_summary("engine.ttft_s")["count"] == 8
+print(f"[ci] telemetry smoke OK ({n} spans; traced upgrade+produce round, "
+      "Perfetto JSON parses with lifecycle/segment/round/publish spans)")
+PY

@@ -39,6 +39,7 @@ from typing import Dict, Iterable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry
 from repro.sharding.rules import dim_sharding
 
 
@@ -205,15 +206,25 @@ class AdapterBank:
         domain's last-known-good — :meth:`rollback` restores them if the
         new version turns out bad downstream. A rejected publish raises
         ``ValueError`` and leaves the bank serving the current version."""
-        if validate:
-            self.validate(domain, adapters)
-            # snapshot BEFORE the donating publish: _snapshot_jit returns
-            # fresh buffers, so the LKG copy survives the donation
-            self._lkg[domain] = self.snapshot(domain)
-            self._lkg_version[domain] = self.versions[domain]
-        slot = jnp.asarray(self.slot(domain), jnp.int32)
-        self.stacked = self._publish_jit(self.stacked, adapters, slot)
-        self.versions[domain] += 1
+        tel = telemetry.get()
+        with tel.span("bank.publish", domain=domain,
+                      validate=validate) as sp:
+            if validate:
+                try:
+                    self.validate(domain, adapters)
+                except ValueError:
+                    tel.count("bank.publish_rejects")
+                    sp.set(rejected=True)
+                    raise
+                # snapshot BEFORE the donating publish: _snapshot_jit
+                # returns fresh buffers, so the LKG copy survives donation
+                self._lkg[domain] = self.snapshot(domain)
+                self._lkg_version[domain] = self.versions[domain]
+            slot = jnp.asarray(self.slot(domain), jnp.int32)
+            self.stacked = self._publish_jit(self.stacked, adapters, slot)
+            self.versions[domain] += 1
+            sp.set(version=self.versions[domain])
+        tel.count("bank.publishes")
 
     def rollback(self, domain: str) -> int:
         """Re-publish the domain's last-known-good adapters (the slot
@@ -227,8 +238,12 @@ class AdapterBank:
                 "(no validated publish yet)")
         # LKG was already validated when it served; publish it unvalidated
         # so rollback can't itself be rejected
-        self.publish(domain, self._lkg[domain], validate=False)
+        tel = telemetry.get()
+        with tel.span("bank.rollback", domain=domain,
+                      to_version=self._lkg_version[domain]):
+            self.publish(domain, self._lkg[domain], validate=False)
         self.rollbacks[domain] += 1
+        tel.count("bank.rollbacks")
         return self._lkg_version[domain]
 
     def last_known_good_version(self, domain: str) -> Optional[int]:
@@ -240,8 +255,12 @@ class AdapterBank:
         """Slice one domain's adapter tree out of the bank (training-side
         acquire; also the per-domain baseline for parity tests). Unlike
         :meth:`publish` this never donates — the bank keeps serving."""
+        tel = telemetry.get()
         slot = jnp.asarray(self.slot(domain), jnp.int32)
-        return _snapshot_jit(self.stacked, slot)
+        with tel.span("bank.snapshot", domain=domain):
+            snap = _snapshot_jit(self.stacked, slot)
+        tel.count("bank.snapshots")
+        return snap
 
     # -- serving ------------------------------------------------------------
     def serving_params(self, backbone: dict) -> dict:

@@ -111,22 +111,19 @@ class RoundCost:
         total = self.tokens + self.padded_tokens
         return self.tokens / total if total else 1.0
 
+    # every field is summed except the max-reduced ones below: peak memory
+    # over a sequence of rounds is the max of the per-round peaks, not a sum
+    _MAX_FIELDS = ("memory_bytes",)
+
     def __add__(self, o: "RoundCost") -> "RoundCost":
-        return RoundCost(self.latency_s + o.latency_s,
-                         self.compute_flops + o.compute_flops,
-                         self.energy_j + o.energy_j,
-                         self.comm_bytes + o.comm_bytes,
-                         max(self.memory_bytes, o.memory_bytes),
-                         self.tokens + o.tokens,
-                         self.examples + o.examples,
-                         self.padded_tokens + o.padded_tokens,
-                         self.dropped_clusters + o.dropped_clusters,
-                         self.skipped_updates + o.skipped_updates,
-                         self.retries + o.retries,
-                         self.retransmit_bytes + o.retransmit_bytes,
-                         self.timed_out + o.timed_out,
-                         self.drafted_tokens + o.drafted_tokens,
-                         self.accepted_tokens + o.accepted_tokens)
+        # field-wise (never positional): a field appended to the dataclass
+        # is automatically summed — a positional rebuild would silently
+        # shift values into the wrong slots (tests/test_core.py pins this)
+        kw = {}
+        for f in dataclasses.fields(self):
+            a, b = getattr(self, f.name), getattr(o, f.name)
+            kw[f.name] = max(a, b) if f.name in self._MAX_FIELDS else a + b
+        return RoundCost(**kw)
 
     @property
     def acceptance_rate(self) -> float:

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry
 from repro.optim.optimizers import Optimizer, apply_updates, clip_by_global_norm
 from repro.sharding.rules import (ParamSpec, dim_sharding, hfsl_round_rules,
                                   named_shardings, shard, use_rules)
@@ -475,19 +476,30 @@ def make_hfsl_round(cfg, optimizer: Optimizer, loss_fn: Callable, *,
         clean = ((mask is None or bool((np.asarray(mask) > 0).all()))
                  and (corrupt is None or not bool(np.asarray(corrupt).any())))
         train = {k: state[k] for k in _TRAIN_KEYS}
-        if clean:
-            out, metrics = cores[False](train, state["backbone"], bank,
-                                        offset)
-        else:
-            if True not in cores:
-                cores[True] = build_core(True)
-            n = jax.tree.leaves(train["adapters_c"])[0].shape[0]
-            mask = (jnp.ones((n,), jnp.float32) if mask is None
-                    else jnp.asarray(mask, jnp.float32))
-            corrupt = (jnp.zeros((n,), bool) if corrupt is None
-                       else jnp.asarray(corrupt, bool))
-            out, metrics = cores[True](train, state["backbone"], bank,
-                                       offset, mask, corrupt)
+        # scan-dispatch span (module singleton, resolved per call): the jit
+        # returns as soon as the round is ENQUEUED, so the duration is the
+        # host-side dispatch share (plus compile on the first call) — the
+        # blocked end-to-end round time is the caller's span
+        # (integrated.upgrade) or the wall clock around block_until_ready
+        tel = telemetry.get()
+        with tel.span("hfsl.round_dispatch", steps=steps, clean=clean):
+            if clean:
+                out, metrics = cores[False](train, state["backbone"], bank,
+                                            offset)
+            else:
+                if True not in cores:
+                    cores[True] = build_core(True)
+                n = jax.tree.leaves(train["adapters_c"])[0].shape[0]
+                mask = (jnp.ones((n,), jnp.float32) if mask is None
+                        else jnp.asarray(mask, jnp.float32))
+                corrupt = (jnp.zeros((n,), bool) if corrupt is None
+                           else jnp.asarray(corrupt, bool))
+                out, metrics = cores[True](train, state["backbone"], bank,
+                                           offset, mask, corrupt)
+        tel.count("hfsl.rounds")
+        tel.count("hfsl.steps", steps)
+        if not clean:
+            tel.count("hfsl.faulted_rounds")
         return {**out, "backbone": state["backbone"]}, metrics
 
     return round_fn

@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hfsl
+from repro.core import hfsl, telemetry
 from repro.core.adapter_bank import AdapterBank
 from repro.core.comm import CostModel, RoundCost
 from repro.core.faults import FaultPlan
@@ -89,7 +89,8 @@ class IntegratedRuntime:
                  mesh=None, faults: Optional[FaultPlan] = None,
                  deadline_s: Optional[float] = None,
                  spec_k: Optional[int] = None, spec_d_model: int = 64,
-                 spec_layers: int = 2):
+                 spec_layers: int = 2,
+                 tel: Optional[telemetry.Telemetry] = None):
         self.cfg = cfg
         self.tasks = tasks                       # domain -> ClassificationTask
         self.n_clusters = n_clusters
@@ -106,6 +107,11 @@ class IntegratedRuntime:
         # rows retire mid-wave as timed_out completions)
         self.faults = faults
         self.deadline_s = deadline_s
+        # telemetry hook: spans/counters for every upgrade/produce round go
+        # to `tel` if given, else the module singleton resolved at call
+        # time (telemetry.enable() before run() instruments everything);
+        # the engine shares the same instance
+        self.tel = tel
         self._fault_round = 0                    # upgrade-round schedule index
         self._record_base = 0                    # rounds from restored runs
         self.publish_rejects = 0                 # validated publishes refused
@@ -187,7 +193,7 @@ class IntegratedRuntime:
                 d_model=spec_d_model, n_layers=spec_layers)
         self.engine = DecodeEngine(cfg, slots=min(serve_slots, serve_batch),
                                    seed=seed, bank=self.bank, mesh=mesh,
-                                   spec=self.spec)
+                                   spec=self.spec, tel=tel)
 
         def _classify_impl(p, b, ids):
             from repro.sharding import rules as R
@@ -203,6 +209,9 @@ class IntegratedRuntime:
             self.domains[n].accuracy = self._measure(n)
 
     # -- internals ---------------------------------------------------------
+    def _telemetry(self) -> telemetry.Telemetry:
+        return self.tel if self.tel is not None else telemetry.get()
+
     def _consensus_adapters(self, domain: str) -> dict:
         """Edge view after FedAvg: cluster-mean adapters (what serves)."""
         return hfsl.consensus_params({
@@ -236,6 +245,7 @@ class IntegratedRuntime:
         AdapterBank (jitted in-place slot update — no host transfer), so
         the next produce round serves the upgraded model immediately.
         """
+        tel = self._telemetry()
         d = self.domains[domain]
         bank = self._banks[domain]
         state = {"backbone": self.backbone, "adapters_c": d.adapters_c,
@@ -244,47 +254,59 @@ class IntegratedRuntime:
         fr, self._fault_round = self._fault_round, self._fault_round + 1
         chaos = self.faults is not None and self.faults.active
         part_n, dropped_n = self.n_clusters, 0
-        t0 = time.time()
-        if chaos:
-            # seeded per-round schedules: which clusters participate and
-            # which get their updates NaN-poisoned (the in-scan guard
-            # where-skips those; dropped clusters carry state untouched)
-            mask_np, _, _ = self.faults.participation(fr, self.n_clusters)
-            corrupt_np = self.faults.corrupt_mask(fr, self.n_clusters)
-            part_n = int(mask_np.sum())
-            dropped_n = self.n_clusters - part_n
-            state, ms = self._round(state, bank.arrays,
-                                    bank.advance(self.steps),
-                                    mask=jnp.asarray(mask_np, jnp.float32),
-                                    corrupt=jnp.asarray(corrupt_np))
-        else:
-            state, ms = self._round(state, bank.arrays,
-                                    bank.advance(self.steps))
-        jax.block_until_ready(state["adapters_c"])
-        dt = time.time() - t0
-        skipped_n = int(np.asarray(ms["skipped"]).sum()) if "skipped" in ms \
-            else 0
-        d.adapters_c, d.opt_state, d.step = \
-            state["adapters_c"], state["opt"], state["step"]
-        d.level += 1
-        try:
-            self.bank.publish(domain, self._consensus_adapters(domain))
-        except ValueError:
-            # a poisoned consensus never reaches live traffic: the bank
-            # keeps serving the current (validated) version
-            self.publish_rejects += 1
-        d.accuracy = self._measure(domain)
-        examples = self.steps * part_n * self.batch
-        seq = bank.arrays["tokens"].shape[-1]
-        flops = 6.0 * self.cfg.active_param_count() * examples * seq
-        n_syncs = (step0 + self.steps) // self.sync_every \
-            - step0 // self.sync_every
-        comm = hfsl.sync_bytes(d.adapters_c) * n_syncs
-        if chaos:                      # only survivors exchange sync bytes
-            comm = int(comm * part_n / self.n_clusters)
-        cost = RoundCost(dt, flops, self.cm.cs.energy(comm), comm, 0,
-                         examples=examples, dropped_clusters=dropped_n,
-                         skipped_updates=skipped_n)
+        with tel.span("integrated.upgrade", domain=domain,
+                      steps=self.steps) as usp:
+            t0 = time.perf_counter()
+            if chaos:
+                # seeded per-round schedules: which clusters participate and
+                # which get their updates NaN-poisoned (the in-scan guard
+                # where-skips those; dropped clusters carry state untouched)
+                mask_np, _, _ = self.faults.participation(fr, self.n_clusters)
+                corrupt_np = self.faults.corrupt_mask(fr, self.n_clusters)
+                part_n = int(mask_np.sum())
+                dropped_n = self.n_clusters - part_n
+                state, ms = self._round(state, bank.arrays,
+                                        bank.advance(self.steps),
+                                        mask=jnp.asarray(mask_np,
+                                                         jnp.float32),
+                                        corrupt=jnp.asarray(corrupt_np))
+            else:
+                state, ms = self._round(state, bank.arrays,
+                                        bank.advance(self.steps))
+            jax.block_until_ready(state["adapters_c"])
+            dt = time.perf_counter() - t0
+            skipped_n = int(np.asarray(ms["skipped"]).sum()) \
+                if "skipped" in ms else 0
+            d.adapters_c, d.opt_state, d.step = \
+                state["adapters_c"], state["opt"], state["step"]
+            d.level += 1
+            try:
+                self.bank.publish(domain, self._consensus_adapters(domain))
+            except ValueError:
+                # a poisoned consensus never reaches live traffic: the bank
+                # keeps serving the current (validated) version
+                self.publish_rejects += 1
+            d.accuracy = self._measure(domain)
+            examples = self.steps * part_n * self.batch
+            seq = bank.arrays["tokens"].shape[-1]
+            flops = 6.0 * self.cfg.active_param_count() * examples * seq
+            n_syncs = (step0 + self.steps) // self.sync_every \
+                - step0 // self.sync_every
+            comm = hfsl.sync_bytes(d.adapters_c) * n_syncs
+            if chaos:                  # only survivors exchange sync bytes
+                comm = int(comm * part_n / self.n_clusters)
+            cost = RoundCost(dt, flops, self.cm.cs.energy(comm), comm, 0,
+                             examples=examples, dropped_clusters=dropped_n,
+                             skipped_updates=skipped_n)
+            # tag the round span with the ledger it booked (RoundCost
+            # fields), so a trace row answers "what did this round cost"
+            usp.set(latency_s=cost.latency_s, examples=cost.examples,
+                    comm_bytes=cost.comm_bytes, ex_per_s=cost.ex_per_s,
+                    dropped_clusters=dropped_n, skipped_updates=skipped_n,
+                    accuracy=d.accuracy)
+        tel.count("integrated.upgrades")
+        tel.count("integrated.examples", examples)
+        tel.observe("integrated.upgrade_s", dt)
         return -self.upgrade_cost, cost
 
     def produce(self, domain) -> tuple[float, RoundCost]:
@@ -304,6 +326,7 @@ class IntegratedRuntime:
         and ``cost.utilization`` exposes how much of that execution served
         real tokens under the engine's ragged continuous batching.
         """
+        tel = self._telemetry()
         domains = [domain] if isinstance(domain, str) else list(domain)
         base, rem = divmod(self.serve_batch, len(domains))
         rows: list[tuple[str, np.ndarray, int]] = []   # (domain, tokens, label)
@@ -316,39 +339,48 @@ class IntegratedRuntime:
             rows += [(d, np.asarray(data["tokens"][j]),
                       int(data["label"][j])) for j in range(cnt)]
         params = self.bank.serving_params(self.backbone)
-        t0 = time.time()
-        for d, toks, _ in rows:                        # ONE drain, mixed waves
-            self.engine.submit(toks, self.serve_gen, domain=d,
-                               deadline_s=self.deadline_s)
-        _, stats = self.engine.run(params)
-        # accuracy through the bank: rows grouped by prompt length only
-        # (one classify call in the common equal-length case), each row
-        # scored by its own domain's stacked head
-        correct = 0
-        by_len: dict[int, list[int]] = {}
-        for j, (_, toks, _) in enumerate(rows):
-            by_len.setdefault(len(toks), []).append(j)
-        for idxs in by_len.values():
-            batch = {"tokens": jnp.asarray(
-                np.stack([rows[j][1] for j in idxs]))}
-            ids = self.bank.adapter_ids([rows[j][0] for j in idxs])
-            logits = self._classify(params, batch, ids)
-            pred = np.asarray(jnp.argmax(logits, -1))
-            correct += int(np.sum(pred == np.asarray(
-                [rows[j][2] for j in idxs])))
-        acc = correct / max(len(rows), 1)
-        # latency covers the whole round (engine waves + the accuracy
-        # forward); stats.wall_s is the pure decode-serving share
-        nbytes = self.serve_batch * (self.cfg.peft.head_dim_out * 4
-                                     + self.serve_gen * 4)
-        executed = stats.tokens + stats.padded_tokens
-        flops = 2.0 * self.cfg.active_param_count() * executed
-        cost = RoundCost(time.time() - t0, flops, self.cm.d2d.energy(nbytes),
-                         nbytes, 0, tokens=stats.tokens,
-                         padded_tokens=stats.padded_tokens,
-                         timed_out=stats.timed_out,
-                         drafted_tokens=stats.drafted,
-                         accepted_tokens=stats.accepted)
+        with tel.span("integrated.produce", domains=",".join(domains),
+                      requests=len(rows)) as psp:
+            t0 = time.perf_counter()
+            for d, toks, _ in rows:                    # ONE drain, mixed waves
+                self.engine.submit(toks, self.serve_gen, domain=d,
+                                   deadline_s=self.deadline_s)
+            _, stats = self.engine.run(params)
+            # accuracy through the bank: rows grouped by prompt length only
+            # (one classify call in the common equal-length case), each row
+            # scored by its own domain's stacked head
+            correct = 0
+            by_len: dict[int, list[int]] = {}
+            for j, (_, toks, _) in enumerate(rows):
+                by_len.setdefault(len(toks), []).append(j)
+            for idxs in by_len.values():
+                batch = {"tokens": jnp.asarray(
+                    np.stack([rows[j][1] for j in idxs]))}
+                ids = self.bank.adapter_ids([rows[j][0] for j in idxs])
+                logits = self._classify(params, batch, ids)
+                pred = np.asarray(jnp.argmax(logits, -1))
+                correct += int(np.sum(pred == np.asarray(
+                    [rows[j][2] for j in idxs])))
+            acc = correct / max(len(rows), 1)
+            # latency covers the whole round (engine waves + the accuracy
+            # forward); stats.wall_s is the pure decode-serving share
+            nbytes = self.serve_batch * (self.cfg.peft.head_dim_out * 4
+                                         + self.serve_gen * 4)
+            executed = stats.tokens + stats.padded_tokens
+            flops = 2.0 * self.cfg.active_param_count() * executed
+            cost = RoundCost(time.perf_counter() - t0, flops,
+                             self.cm.d2d.energy(nbytes),
+                             nbytes, 0, tokens=stats.tokens,
+                             padded_tokens=stats.padded_tokens,
+                             timed_out=stats.timed_out,
+                             drafted_tokens=stats.drafted,
+                             accepted_tokens=stats.accepted)
+            psp.set(latency_s=cost.latency_s, tokens=cost.tokens,
+                    padded_tokens=cost.padded_tokens,
+                    tok_per_s=cost.tok_per_s, utilization=cost.utilization,
+                    timed_out=cost.timed_out, accuracy=acc)
+        tel.count("integrated.produces")
+        tel.observe("integrated.produce_s", cost.latency_s)
         return self.profit_scale * acc, cost
 
     # -- scheduling ----------------------------------------------------------

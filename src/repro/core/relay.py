@@ -39,6 +39,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry
 from repro.core.comm import CostModel, RoundCost, transfer_cost
 from repro.core.faults import FaultPlan, payload_checksum
 from repro.core.peft import tree_bytes
@@ -121,40 +122,59 @@ class KnowledgeRelay:
         per retry. Returns the delivered payload (the caller's tree —
         corrupted wire copies never survive the checksum)."""
         tid, self._tid = self._tid, self._tid + 1
+        tel = telemetry.get()
         plan = self.faults
         if plan is None or not plan.active:
             self.ledger.transfers += 1
             setattr(self.ledger, field, getattr(self.ledger, field) + nbytes)
             self.cost = self.cost + transfer_cost(nbytes, link)
+            tel.count("relay.transfers")
+            tel.count(f"relay.bytes.{field}", nbytes)
             return payload
         chk = payload_checksum(payload) if payload is not None else None
-        for attempt in range(self.max_retries + 1):
-            if attempt > 0:
-                self.ledger.retries += 1
-                self.ledger.retransmit_bytes += nbytes
-                # capped exponential base, scaled by the plan's seeded
-                # jitter draw for THIS (transfer, attempt): retries across
-                # concurrent transfers spread out instead of thundering in
-                # lockstep, and replaying the same plan re-books the exact
-                # same latency (jitter is part of the schedule, not noise)
-                backoff = min(self.backoff_s * 2.0 ** (attempt - 1),
-                              self.backoff_cap_s) \
-                    * (1.0 + plan.retry_jitter(tid, attempt))
-                self.cost = self.cost + RoundCost(
-                    backoff, 0.0, 0.0, 0, 0, retries=1,
-                    retransmit_bytes=nbytes)
-            self.ledger.transfers += 1
-            setattr(self.ledger, field, getattr(self.ledger, field) + nbytes)
-            self.cost = self.cost + transfer_cost(nbytes, link)
-            lost = plan.link_drops(tid, attempt)
-            if not lost and payload is not None \
-                    and plan.payload_corrupted(tid, attempt):
-                # the wire copy arrives corrupted; the end-to-end checksum
-                # rejects it and the sender retransmits
-                recv = plan.corrupt_payload(payload, tid, attempt)
-                lost = payload_checksum(recv) != chk
-            if not lost:
-                return payload
+        with tel.span("relay.transfer", field=field, bytes=nbytes,
+                      tid=tid) as sp:
+            for attempt in range(self.max_retries + 1):
+                if attempt > 0:
+                    self.ledger.retries += 1
+                    self.ledger.retransmit_bytes += nbytes
+                    # capped exponential base, scaled by the plan's seeded
+                    # jitter draw for THIS (transfer, attempt): retries
+                    # across concurrent transfers spread out instead of
+                    # thundering in lockstep, and replaying the same plan
+                    # re-books the exact same latency (jitter is part of
+                    # the schedule, not noise)
+                    backoff = min(self.backoff_s * 2.0 ** (attempt - 1),
+                                  self.backoff_cap_s) \
+                        * (1.0 + plan.retry_jitter(tid, attempt))
+                    self.cost = self.cost + RoundCost(
+                        backoff, 0.0, 0.0, 0, 0, retries=1,
+                        retransmit_bytes=nbytes)
+                    tel.count("relay.retries")
+                    tel.count("relay.retransmit_bytes", nbytes)
+                    tel.observe("relay.backoff_s", backoff)
+                self.ledger.transfers += 1
+                setattr(self.ledger, field,
+                        getattr(self.ledger, field) + nbytes)
+                self.cost = self.cost + transfer_cost(nbytes, link)
+                tel.count("relay.transfers")
+                tel.count(f"relay.bytes.{field}", nbytes)
+                lost = plan.link_drops(tid, attempt)
+                if lost:
+                    tel.count("relay.link_drops")
+                if not lost and payload is not None \
+                        and plan.payload_corrupted(tid, attempt):
+                    # the wire copy arrives corrupted; the end-to-end
+                    # checksum rejects it and the sender retransmits
+                    recv = plan.corrupt_payload(payload, tid, attempt)
+                    lost = payload_checksum(recv) != chk
+                    if lost:
+                        tel.count("relay.checksum_rejects")
+                if not lost:
+                    sp.set(attempts=attempt + 1)
+                    return payload
+            sp.set(attempts=self.max_retries + 1, gave_up=True)
+        tel.count("relay.gave_up")
         raise RelayTransferError(
             f"transfer {tid} ({field}, {nbytes} B) dropped "
             f"{self.max_retries + 1} times; giving up")
@@ -192,6 +212,9 @@ class KnowledgeRelay:
             self.ledger.transfers += n_clusters
             self._tid += n_clusters
             self.cost = self.cost + transfer_cost(nb, self.cm.cs)
+            tel = telemetry.get()
+            tel.count("relay.transfers", n_clusters)
+            tel.count("relay.bytes.edge_to_end", nb)
             return self.edges[domain]
         for _ in range(n_clusters):
             self._transfer(per, self.cm.cs, "edge_to_end",

@@ -64,6 +64,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import telemetry
+from repro.core.telemetry import Histogram, Telemetry
 from repro.models import model as M
 
 
@@ -82,11 +84,15 @@ class Request:
     max_new_tokens: int
     extras: Optional[dict] = None      # per-request modality rows (no batch dim)
     domain: Optional[str] = None       # multi-tenant: AdapterBank slot owner
-    deadline_s: Optional[float] = None  # wall-clock budget from submit time
-    t_submit: float = 0.0              # submit wall time (deadline anchor)
+    deadline_s: Optional[float] = None  # monotonic budget from submit time
+    # deadline / latency anchor: time.perf_counter() at submit. MONOTONIC
+    # by contract — a wall-clock step (NTP slew, manual set) must never
+    # spuriously retire a request as timed_out or corrupt its latency
+    t_submit: float = 0.0
     speculative: bool = True           # opt this row out of spec drafting
                                        # (it then decodes plainly THROUGH
                                        # the verify pass — mixed waves)
+    t_submit_wall: float = 0.0         # informational ONLY (never compared)
 
 
 @dataclasses.dataclass
@@ -111,9 +117,13 @@ class Slot:
 class Completion:
     uid: int
     tokens: np.ndarray                 # (max_new_tokens,) generated tokens
-    latency_s: float                   # drain-start -> retirement wall time
+    latency_s: float                   # submit -> retirement (monotonic)
     wave: int                          # prefill wave that admitted the row
     timed_out: bool = False            # retired at its deadline (partial tokens)
+    queue_s: float = 0.0               # submit -> wave admission (queue wait)
+    ttft_s: Optional[float] = None     # submit -> first token host-visible
+                                       # (None: retired before any token)
+    tok_s: float = 0.0                 # tokens / (admission -> retirement)
 
 
 @dataclasses.dataclass
@@ -127,6 +137,13 @@ class EngineStats:
     wall_s: float = 0.0
     drafted: int = 0                   # drafter-proposed tokens (spec serving)
     accepted: int = 0                  # proposals the verify pass committed
+    # per-request latency distributions, summarized from log-bucketed
+    # histograms (core/telemetry.py::Histogram.summary: count/mean/p50/
+    # p95/p99) — always recorded (a handful of perf_counter reads per
+    # dispatch), independent of whether global telemetry is enabled
+    ttft_hist: Optional[dict] = None       # time-to-first-token (s)
+    queue_hist: Optional[dict] = None      # queue wait (s)
+    tok_latency_hist: Optional[dict] = None  # per-token decode latency (s)
 
     @property
     def tok_per_s(self) -> float:
@@ -149,11 +166,17 @@ class DecodeEngine:
     """Packs queued requests into fixed slots and serves them ragged."""
 
     def __init__(self, cfg, *, slots: int = 8, greedy: bool = True,
-                 seed: int = 0, bank=None, mesh=None, spec=None):
+                 seed: int = 0, bank=None, mesh=None, spec=None,
+                 tel: Optional[Telemetry] = None):
         self.cfg = cfg
         self.slots = slots
         self.greedy = greedy
         self.bank = bank                   # Optional[AdapterBank]: multi-tenant
+        # telemetry: spans/counters go to `tel` if given, else to the
+        # module singleton resolved at CALL time (so telemetry.enable()
+        # after construction still instruments this engine). Per-request
+        # latency histograms in EngineStats are recorded regardless.
+        self.tel = tel
         # speculative serving: with a core.spec_decode.SpecDecoder, decode
         # segments run draft->verify chunks (k proposals + ONE batched
         # verify pass) instead of plain per-token scans. Greedy-only:
@@ -234,9 +257,13 @@ class DecodeEngine:
         uid = self._uid
         self._uid += 1
         self._queue.append(Request(uid, tokens, int(max_new_tokens), extras,
-                                   domain, deadline_s, time.time(),
-                                   bool(speculative)))
+                                   domain, deadline_s, time.perf_counter(),
+                                   bool(speculative), time.time()))
+        self._telemetry().count("engine.submitted")
         return uid
+
+    def _telemetry(self) -> Telemetry:
+        return self.tel if self.tel is not None else telemetry.get()
 
     def pending(self) -> int:
         return len(self._queue)
@@ -279,7 +306,11 @@ class DecodeEngine:
         out: list[Completion] = []
         if not self._queue:
             return out, stats
-        t_all = time.time()
+        tel = self._telemetry()
+        # drain-local latency histograms: always on (a few clock reads per
+        # DISPATCH, never per token), summarized into EngineStats at exit
+        h_ttft, h_queue, h_tok = Histogram(), Histogram(), Histogram()
+        t_all = time.perf_counter()
         extras_keys = self._check_extras()
         tenant = self._queue[0].domain is not None
         # cache capacity: one size per drain keeps every refill shape-stable
@@ -296,16 +327,57 @@ class DecodeEngine:
         ids = None                         # device (B,) adapter slot ids
         cur_extras: list[Optional[dict]] = [None] * B
         cur_dom: list[Optional[str]] = [None] * B
+        # per-slot request lifecycle anchors (all monotonic):
+        # submit (on the Request) -> admit (wave packing) -> first token
+        # host-visible (first segment sync serving the row) -> retire
+        t_admit = [0.0] * B
+        t_first: list[Optional[float]] = [None] * B
 
+        def retire(i: int, now: float, *, timed_out: bool = False) -> None:
+            """Complete slot i's request: latency fields + trace span."""
+            req = slot_req[i]
+            toks_i = (np.concatenate(bufs[i]) if bufs[i]
+                      else np.zeros(0, np.int32))
+            ttft = t_first[i] - req.t_submit if t_first[i] is not None \
+                else None
+            decode_dt = now - t_admit[i]
+            out.append(Completion(
+                req.uid, toks_i, now - req.t_submit, slot_wave[i],
+                timed_out=timed_out, queue_s=t_admit[i] - req.t_submit,
+                ttft_s=ttft,
+                tok_s=len(toks_i) / decode_dt if decode_dt > 0 else 0.0))
+            stats.requests += 1
+            if timed_out:
+                stats.timed_out += 1
+                tel.count("engine.timed_out")
+            if ttft is not None:
+                h_ttft.record(ttft)
+                tel.observe("engine.ttft_s", ttft)
+            tel.count("engine.retired")
+            tel.record_span("engine.request", req.t_submit, now,
+                            uid=req.uid, wave=slot_wave[i],
+                            tokens=len(toks_i), domain=req.domain,
+                            timed_out=timed_out)
+            bufs[i] = []
+            remaining[i] = 0
+            slot_req[i] = None
+            self.slot_table[i].recycle()
+
+        drain = tel.span("engine.drain", slots=B, queued=len(self._queue))
+        drain.__enter__()
         while self._queue or remaining.any():
             packed = self._fill_slots()
             if packed:
                 stats.waves += 1
+                t_adm = time.perf_counter()    # queue wait ends at admission
                 for i, req in packed:
                     slot_req[i], slot_wave[i] = req, stats.waves - 1
                     remaining[i] = req.max_new_tokens
                     cur_extras[i], cur_dom[i] = req.extras, req.domain
                     spec_rows[i] = req.speculative
+                    t_admit[i], t_first[i] = t_adm, None
+                    h_queue.record(t_adm - req.t_submit)
+                    tel.observe("engine.queue_s", t_adm - req.t_submit)
                 live = [i for i in range(B) if slot_req[i] is not None]
                 if tenant:                     # full-wave ids for segments
                     doms = [cur_dom[i] if cur_dom[i] is not None
@@ -327,18 +399,21 @@ class DecodeEngine:
                              **self._stack_extras(
                                  [cur_extras[i] for i in range(B)],
                                  extras_keys, live)}
-                    tok, caches, pos = M._wave_prefill_fn(
-                        self.cfg, cap, self.mesh)(
-                        wp, batch, jnp.asarray(lens), ids)
-                    if self.spec is not None:
-                        # drafter rides the same wave: its own prefill
-                        # builds the recurrent draft state per row (its
-                        # next-token guess is discarded — the chunk carry
-                        # is always the target's committed token)
-                        dtok, dcaches, dpos = M._wave_prefill_fn(
-                            self.spec.cfg, cap, self.mesh)(
-                            self.spec.params, {"tokens": batch["tokens"]},
-                            jnp.asarray(lens), None)
+                    with tel.span("engine.prefill", wave=stats.waves - 1,
+                                  rows=len(packed), seq=S_pad):
+                        tok, caches, pos = M._wave_prefill_fn(
+                            self.cfg, cap, self.mesh)(
+                            wp, batch, jnp.asarray(lens), ids)
+                        if self.spec is not None:
+                            # drafter rides the same wave: its own prefill
+                            # builds the recurrent draft state per row (its
+                            # next-token guess is discarded — the chunk
+                            # carry is always the target's committed token)
+                            dtok, dcaches, dpos = M._wave_prefill_fn(
+                                self.spec.cfg, cap, self.mesh)(
+                                self.spec.params,
+                                {"tokens": batch["tokens"]},
+                                jnp.asarray(lens), None)
                 else:
                     # in-wave refill: prefill ONLY the admitted rows
                     # (pow2-padded row count) and scatter them into the
@@ -360,35 +435,28 @@ class DecodeEngine:
                         rdom = [req.domain for _, req in packed]
                         rdom += [rdom[0]] * (Br - len(packed))
                         ids_rows = self.bank.adapter_ids(rdom)
-                    tok, caches, pos = M._refill_fn(
-                        self.cfg, cap, self.mesh)(
-                        wp, batch, jnp.asarray(lens), jnp.asarray(row_idx),
-                        tok, caches, pos, ids_rows)
-                    if self.spec is not None:
-                        dtok, dcaches, dpos = M._refill_fn(
-                            self.spec.cfg, cap, self.mesh)(
-                            self.spec.params, {"tokens": batch["tokens"]},
-                            jnp.asarray(lens), jnp.asarray(row_idx),
-                            dtok, dcaches, dpos, None)
-            # deadline sweep: a live row past its wall-clock budget is
+                    with tel.span("engine.refill", wave=stats.waves - 1,
+                                  rows=len(packed), seq=S_pad):
+                        tok, caches, pos = M._refill_fn(
+                            self.cfg, cap, self.mesh)(
+                            wp, batch, jnp.asarray(lens),
+                            jnp.asarray(row_idx), tok, caches, pos, ids_rows)
+                        if self.spec is not None:
+                            dtok, dcaches, dpos = M._refill_fn(
+                                self.spec.cfg, cap, self.mesh)(
+                                self.spec.params, {"tokens": batch["tokens"]},
+                                jnp.asarray(lens), jnp.asarray(row_idx),
+                                dtok, dcaches, dpos, None)
+            # deadline sweep: a live row past its monotonic budget is
             # retired HERE, mid-wave, as a timed-out completion with the
             # tokens it has so far — over-budget rows never stall the drain
-            now = time.time()
+            now = time.perf_counter()
             for i in range(B):
                 req = slot_req[i]
                 if req is None or req.deadline_s is None:
                     continue
                 if now - req.t_submit >= req.deadline_s:
-                    toks_i = (np.concatenate(bufs[i]) if bufs[i]
-                              else np.zeros(0, np.int32))
-                    out.append(Completion(req.uid, toks_i, now - t_all,
-                                          slot_wave[i], timed_out=True))
-                    stats.requests += 1
-                    stats.timed_out += 1
-                    bufs[i] = []
-                    remaining[i] = 0
-                    slot_req[i] = None
-                    self.slot_table[i].recycle()
+                    retire(i, now, timed_out=True)
             if not remaining.any():
                 continue                       # re-pack freed slots (or exit)
             # segment length: with queued work, the pow2 floor of the
@@ -399,6 +467,8 @@ class DecodeEngine:
             # inside the scan idles finished rows either way; fewer
             # dispatches, identical padded_tokens).
             live_rem = remaining[remaining > 0]
+            live_n = int((remaining > 0).sum())
+            t_seg0 = time.perf_counter()
             if self.spec is not None:
                 # speculative segment: `chunks` draft->verify chunks, each
                 # committing 1..k+1 tokens per row. The chunk count is the
@@ -409,16 +479,19 @@ class DecodeEngine:
                 budget = int(live_rem.min() if self._queue
                              else live_rem.max())
                 chunks = max(1, _pow2floor(max(1, budget // Tc)))
-                (toks, counts, dr, ac, tok, caches, dcaches, pos,
-                 _) = M._spec_segment_fn(
-                    self.cfg, self.spec.cfg, chunks, self.spec.k,
-                    self.mesh)(
-                    self._wave_params(params, tenant), self.spec.params,
-                    tok, caches, dcaches, pos,
-                    jnp.asarray(remaining, jnp.int32),
-                    jnp.asarray(spec_rows), ids)
-                toks = np.asarray(toks)        # device sync = segment done
-                counts = np.asarray(counts)    # per-row committed tokens
+                with tel.span("engine.segment", chunks=chunks, k=self.spec.k,
+                              live=live_n, speculative=True) as ssp:
+                    (toks, counts, dr, ac, tok, caches, dcaches, pos,
+                     _) = M._spec_segment_fn(
+                        self.cfg, self.spec.cfg, chunks, self.spec.k,
+                        self.mesh)(
+                        self._wave_params(params, tenant), self.spec.params,
+                        tok, caches, dcaches, pos,
+                        jnp.asarray(remaining, jnp.int32),
+                        jnp.asarray(spec_rows), ids)
+                    toks = np.asarray(toks)    # device sync = segment done
+                    counts = np.asarray(counts)  # per-row committed tokens
+                    ssp.set(drafted=int(dr), accepted=int(ac))
                 stats.drafted += int(dr)
                 stats.accepted += int(ac)
                 executed = chunks * Tc * B     # verify slot-steps run
@@ -428,15 +501,19 @@ class DecodeEngine:
                 key = None
                 if not self.greedy:
                     self._key, key = jax.random.split(self._key)
-                toks, tok, caches, pos, _, key = M._segment_fn(
-                    self.cfg, seg, self.greedy, self.mesh)(
-                    self._wave_params(params, tenant), tok, caches, pos,
-                    jnp.asarray(remaining, jnp.int32), key, ids)
-                toks = np.asarray(toks)        # device sync = segment done
+                with tel.span("engine.segment", seg=seg, live=live_n,
+                              speculative=False):
+                    toks, tok, caches, pos, _, key = M._segment_fn(
+                        self.cfg, seg, self.greedy, self.mesh)(
+                        self._wave_params(params, tenant), tok, caches, pos,
+                        jnp.asarray(remaining, jnp.int32), key, ids)
+                    toks = np.asarray(toks)    # device sync = segment done
                 if key is not None:
                     self._key = key            # carried per-step splits
                 counts = np.minimum(seg, remaining)
                 executed = seg * B
+            t_seg1 = time.perf_counter()
+            seg_wall = t_seg1 - t_seg0
             stats.segments += 1
             served_now = 0
             for i in range(B):
@@ -446,18 +523,28 @@ class DecodeEngine:
                 bufs[i].append(toks[i, :served])
                 remaining[i] -= served
                 served_now += served
+                if served > 0:
+                    # per-token latency: this row's share of the segment
+                    # wall, one observation per served token
+                    h_tok.record(seg_wall / served, n=served)
+                    tel.observe("engine.tok_latency_s", seg_wall / served,
+                                n=served)
+                    if t_first[i] is None:     # first token host-visible
+                        t_first[i] = t_seg1
                 if remaining[i] == 0:          # retire: complete + free slot
-                    req = slot_req[i]
-                    out.append(Completion(
-                        req.uid, np.concatenate(bufs[i]),
-                        time.time() - t_all, slot_wave[i]))
-                    stats.requests += 1
-                    bufs[i] = []
-                    slot_req[i] = None
-                    self.slot_table[i].recycle()
+                    retire(i, t_seg1)
             stats.tokens += served_now
             stats.padded_tokens += executed - served_now
-        stats.wall_s = time.time() - t_all
+            tel.observe("engine.segment_s", seg_wall)
+        stats.wall_s = time.perf_counter() - t_all
+        stats.ttft_hist = h_ttft.summary()
+        stats.queue_hist = h_queue.summary()
+        stats.tok_latency_hist = h_tok.summary()
+        tel.count("engine.tokens", stats.tokens)
+        tel.count("engine.padded_tokens", stats.padded_tokens)
+        drain.set(requests=stats.requests, tokens=stats.tokens,
+                  waves=stats.waves, segments=stats.segments)
+        drain.__exit__(None, None, None)
         return out, stats
 
     def _stack_extras(self, cur_extras, keys: frozenset, live) -> dict:

@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.checkpoint import io as ckpt_io
 from repro.configs.base import get_config
+from repro.core import telemetry
 from repro.models import model as M
 
 
@@ -94,7 +95,17 @@ def main(argv=None):
                     default="scan")
     ap.add_argument("--draft-k", type=int, default=4,
                     help="--impl spec: drafted tokens per verify chunk")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable telemetry and write a Chrome trace-event "
+                         "JSON here (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable telemetry and write the counter/histogram "
+                         "snapshot as JSON here")
     args = ap.parse_args(argv)
+
+    traced = args.trace_out or args.metrics_out
+    if traced:
+        telemetry.enable()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -115,6 +126,18 @@ def main(argv=None):
         extra = {"frames": jnp.zeros(
             (args.batch, cfg.audio.n_audio_frames, cfg.d_model),
             jnp.dtype(cfg.dtype))}
+
+    def export_telemetry():
+        if not traced:
+            return
+        tel = telemetry.get()
+        if args.trace_out:
+            n = tel.export_trace(args.trace_out)
+            print(f"[serve] wrote {n} trace events to {args.trace_out}")
+        if args.metrics_out:
+            tel.export_metrics(args.metrics_out)
+            print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
+        print(tel.report())
 
     if args.impl in ("engine", "spec"):
         from repro.launch.engine import DecodeEngine
@@ -140,6 +163,11 @@ def main(argv=None):
                   f"{stats.tokens} tokens in {stats.wall_s:.2f}s "
                   f"({stats.tok_per_s:.1f} tok/s, {stats.waves} waves{acc}); "
                   f"first row: {toks[0][:8]}")
+            if stats.ttft_hist:
+                h = stats.ttft_hist
+                print(f"[serve]   ttft p50={h['p50']:.3f}s "
+                      f"p95={h['p95']:.3f}s p99={h['p99']:.3f}s")
+        export_telemetry()
         return
 
     gen_fn = generate if args.impl == "scan" else generate_loop
@@ -147,13 +175,17 @@ def main(argv=None):
         key, sub = jax.random.split(key)
         prompts = jax.random.randint(sub, (args.batch, args.prompt_len), 0,
                                      cfg.vocab_size, dtype=jnp.int32)
-        t0 = time.time()
-        toks = gen_fn(params, cfg, prompts, gen=args.gen, extra_batch=extra)
-        toks = np.asarray(toks)
-        dt = time.time() - t0
+        t0 = time.perf_counter()
+        with telemetry.get().span("serve.request", impl=args.impl,
+                                  batch=args.batch, gen=args.gen):
+            toks = gen_fn(params, cfg, prompts, gen=args.gen,
+                          extra_batch=extra)
+            toks = np.asarray(toks)
+        dt = time.perf_counter() - t0
         tps = args.batch * args.gen / dt
         print(f"[serve] request {r}: generated {toks.shape} in {dt:.2f}s "
               f"({tps:.1f} tok/s); first row: {toks[0][:8]}")
+    export_telemetry()
 
 
 if __name__ == "__main__":

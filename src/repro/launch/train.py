@@ -25,7 +25,7 @@ import numpy as np
 
 from repro.checkpoint import io as ckpt
 from repro.configs.base import get_config
-from repro.core import hfsl
+from repro.core import hfsl, telemetry
 from repro.core.peft import trainable_fraction, tree_bytes
 from repro.data.noniid import partition_by_classes
 from repro.data.pipeline import BatchBank, cluster_batches
@@ -70,7 +70,16 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable telemetry and write a Chrome trace-event "
+                         "JSON here (open in Perfetto / chrome://tracing)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable telemetry and write the counter/histogram "
+                         "snapshot as JSON here")
     args = ap.parse_args(argv)
+
+    if args.trace_out or args.metrics_out:
+        telemetry.enable()
 
     cfg = build_cfg(args)
     key = jax.random.PRNGKey(args.seed)
@@ -118,11 +127,17 @@ def main(argv=None):
                     cfg, opt, loss_fn, steps=chunk,
                     sync_every=args.sync_every,
                     microbatches=args.microbatches, remat=remat)
-            state, metrics = rounds[chunk](state, bank.arrays,
-                                           bank.advance(chunk))
-            done += chunk
-            m = {k: float(v[-1]) for k, v in metrics.items()
-                 if jnp.ndim(v) == 1}
+            # the span covers dispatch + the metric host-read (the float()
+            # below syncs), so its duration is the blocked round time — the
+            # nested hfsl.round_dispatch span is the host-dispatch share
+            with telemetry.get().span("train.round", steps=chunk,
+                                      done=done) as rsp:
+                state, metrics = rounds[chunk](state, bank.arrays,
+                                               bank.advance(chunk))
+                done += chunk
+                m = {k: float(v[-1]) for k, v in metrics.items()
+                     if jnp.ndim(v) == 1}
+                rsp.set(**m)
             print(f"[train] step {done:5d} {m} "
                   f"({(time.time()-t0)/done:.2f}s/step)")
     else:
@@ -137,6 +152,16 @@ def main(argv=None):
                       f"({(time.time()-t0)/(i+1):.2f}s/step)")
     print(f"[train] done in {time.time()-t0:.1f}s; "
           f"fedavg bytes/sync: {hfsl.sync_bytes(state['adapters_c'])}")
+
+    if args.trace_out or args.metrics_out:
+        tel = telemetry.get()
+        if args.trace_out:
+            n = tel.export_trace(args.trace_out)
+            print(f"[train] wrote {n} trace events to {args.trace_out}")
+        if args.metrics_out:
+            tel.export_metrics(args.metrics_out)
+            print(f"[train] wrote metrics snapshot to {args.metrics_out}")
+        print(tel.report())
 
     if args.ckpt:
         params = hfsl.consensus_params(state)

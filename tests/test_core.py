@@ -235,3 +235,22 @@ class TestComm:
         assert inf.latency_s < tr.latency_s
         assert inf.comm_bytes < tr.comm_bytes
         assert inf.energy_j < tr.energy_j
+
+    def test_round_cost_add_covers_every_field(self):
+        """RoundCost.__add__ must combine EVERY field, present and future:
+        this test enumerates dataclasses.fields so a field appended to the
+        dataclass but dropped by addition fails here immediately."""
+        flds = dataclasses.fields(comm.RoundCost)
+        a = comm.RoundCost(**{f.name: i + 1 for i, f in enumerate(flds)})
+        b = comm.RoundCost(**{f.name: 10 * (i + 1)
+                              for i, f in enumerate(flds)})
+        c = a + b
+        for i, f in enumerate(flds):
+            got = getattr(c, f.name)
+            if f.name in comm.RoundCost._MAX_FIELDS:
+                # peak metrics max-reduce across rounds (memory high-water)
+                assert got == 10 * (i + 1), f.name
+            else:
+                assert got == 11 * (i + 1), f.name
+        # max-reduction is order-independent
+        assert (b + a).memory_bytes == c.memory_bytes
