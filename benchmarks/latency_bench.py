@@ -1,0 +1,127 @@
+"""Serving latency under offered load: Poisson arrivals, paged vs dense.
+
+The throughput benches (ragged_bench, serve_bench) front-load the whole
+queue, so they measure drain bandwidth, not latency — every request's
+queue wait is an artifact of submission order. This bench drives the
+engine the way traffic actually arrives: a Poisson arrival trace through
+``DecodeEngine.serve_trace`` (arrival-driven admission), on a compressed
+timescale so the run stays CPU-friendly. Both engines serve the SAME
+trace; the paged engine additionally block-gates admission, so a burst
+beyond pool capacity queues head-of-line until blocks retire.
+
+Emits ``name,us_per_call,derived`` rows:
+
+- ``latency_dense`` / ``latency_paged`` — wall time of the traced drain;
+  derived carries p50/p99 TTFT and per-token decode latency (seconds,
+  from the engine's log-bucketed histograms).
+- ``latency_paged_occupancy`` — pool occupancy (useful tokens per
+  allocated pool-block token) vs the dense slab's utilization
+  (every row padded to the drain-wide pow2 cap). Paged must dominate:
+  blocks are sized per request, the slab pads to the worst row.
+
+Compile time is excluded (warmup drain per engine).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_config
+from repro.core.paged import PagedSpec
+from repro.launch.engine import DecodeEngine
+from repro.models import model as M
+
+
+def _pow2ceil(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _poisson_trace(n, lengths, budgets, vocab, *, mean_gap_s, seed=0):
+    """Timed arrivals: exponential inter-arrival gaps (Poisson process),
+    round-robin mixed prompt lengths and token budgets."""
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for i in range(n):
+        t += float(rng.exponential(mean_gap_s))
+        L = lengths[i % len(lengths)]
+        out.append((t, rng.integers(0, vocab, L).astype(np.int32),
+                    int(budgets[i % len(budgets)])))
+    return out
+
+
+def _drain(engine, params, trace):
+    comps, stats = engine.serve_trace(params, trace)
+    assert len(comps) == len(trace)
+    return stats
+
+
+def _pcts(hist):
+    return (hist or {}).get("p50", 0.0), (hist or {}).get("p99", 0.0)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--mean-gap-ms", type=float, default=5.0,
+                    help="mean Poisson inter-arrival gap (compressed time)")
+    ap.add_argument("--n-blocks", type=int, default=64)
+    ap.add_argument("--block-size", type=int, default=8)
+    # benchmarks/run.py imports main() with argv=None -> defaults
+    args = ap.parse_args([] if argv is None else argv)
+
+    cfg = get_config(args.arch).reduced().with_(dtype="float32")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    lengths = [6, 12, 9, 18, 7, 15]
+    budgets = [4, 12, 8, 2, 16, 6]
+    trace = _poisson_trace(args.requests, lengths, budgets, cfg.vocab_size,
+                           mean_gap_s=args.mean_gap_ms / 1e3)
+    ntok = sum(g for _, _, g in trace)
+    paged_spec = PagedSpec(n_blocks=args.n_blocks,
+                           block_size=args.block_size)
+
+    results = {}
+    for name, mk in (("dense", lambda: DecodeEngine(cfg, slots=args.slots)),
+                     ("paged", lambda: DecodeEngine(cfg, slots=args.slots,
+                                                    paged=paged_spec))):
+        _drain(mk(), params, trace)            # warmup: compile + first drain
+        t0 = time.time()
+        stats = _drain(mk(), params, trace)
+        dt = time.time() - t0
+        t50, t99 = _pcts(stats.ttft_hist)
+        d50, d99 = _pcts(stats.tok_latency_hist)
+        emit(f"latency_{name}", dt * 1e6,
+             f"tok_s={ntok / dt:.1f};ttft_p50_s={t50:.4f};"
+             f"ttft_p99_s={t99:.4f};tok_p50_s={d50:.4f};tok_p99_s={d99:.4f}")
+        results[name] = {"wall_s": dt, "ttft_p50_s": t50, "ttft_p99_s": t99,
+                         "tok_p50_s": d50, "tok_p99_s": d99, "stats": stats}
+
+    # cache-footprint comparison on the same trace: the dense slab pads
+    # every row to the drain-wide pow2 cap; paged blocks are sized per
+    # request, so occupancy must dominate the slab's utilization
+    demand = [len(t) + g for _, t, g in trace]
+    slab_util = sum(demand) / (len(demand) * _pow2ceil(max(demand)))
+    occ = results["paged"]["stats"].pool_occupancy
+    assert occ >= slab_util, (occ, slab_util)
+    emit("latency_paged_occupancy", 0,
+         f"pool_occupancy={occ:.3f};dense_slab_util={slab_util:.3f};"
+         f"peak_blocks={results['paged']['stats'].pool_peak_blocks}")
+    results["pool_occupancy"] = occ
+    results["dense_slab_util"] = slab_util
+    for r in results.values():
+        if isinstance(r, dict):
+            r.pop("stats", None)
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+    out = main(sys.argv[1:])
+    print(f"# paged occupancy {out['pool_occupancy']:.3f} vs dense slab "
+          f"{out['dense_slab_util']:.3f}; paged ttft p99 "
+          f"{out['paged']['ttft_p99_s'] * 1e3:.1f} ms")

@@ -20,8 +20,8 @@ import time
 import traceback
 
 ALL = ["table5_scheduler", "fig2_comm", "kernels_bench", "decode_bench",
-       "serve_bench", "ragged_bench", "spec_bench", "finetune_bench",
-       "shard_bench", "chaos_bench", "telemetry_bench",
+       "serve_bench", "ragged_bench", "latency_bench", "spec_bench",
+       "finetune_bench", "shard_bench", "chaos_bench", "telemetry_bench",
        "fig6_pretraining", "fig7_peft", "table3_noniid", "table4_clusters",
        "roofline_report"]
 

@@ -90,7 +90,8 @@ class IntegratedRuntime:
                  deadline_s: Optional[float] = None,
                  spec_k: Optional[int] = None, spec_d_model: int = 64,
                  spec_layers: int = 2,
-                 tel: Optional[telemetry.Telemetry] = None):
+                 tel: Optional[telemetry.Telemetry] = None,
+                 paged=None):
         self.cfg = cfg
         self.tasks = tasks                       # domain -> ClassificationTask
         self.n_clusters = n_clusters
@@ -191,9 +192,13 @@ class IntegratedRuntime:
             self.spec = SpecDecoder.init(
                 cfg, jax.random.PRNGKey(seed + 997), k=spec_k,
                 d_model=spec_d_model, n_layers=spec_layers)
+        # paged serving: a core.paged.PagedSpec swaps the engine's dense
+        # per-slot cache slabs for the block-pool layout (cross-drain
+        # prefix revival included); mutually exclusive with spec_k —
+        # DecodeEngine validates the combination.
         self.engine = DecodeEngine(cfg, slots=min(serve_slots, serve_batch),
                                    seed=seed, bank=self.bank, mesh=mesh,
-                                   spec=self.spec, tel=tel)
+                                   spec=self.spec, tel=tel, paged=paged)
 
         def _classify_impl(p, b, ids):
             from repro.sharding import rules as R

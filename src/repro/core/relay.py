@@ -23,13 +23,15 @@ bank is just the device-resident serving copy.
 
 Constructed with a :class:`~repro.core.faults.FaultPlan`, every transfer
 routes through a lossy link: attempts may be dropped or bit-corrupted per
-the plan's schedule, a CRC32 payload checksum rejects corrupted deliveries,
-and the relay retries with capped exponential backoff. Retries and
-retransmitted bytes are ledgered (``Ledger.retries`` /
-``Ledger.retransmit_bytes`` and the matching ``RoundCost`` fields); a
-transfer that exhausts ``max_retries`` raises :class:`RelayTransferError`.
-Without a plan (or with an all-off plan) the accounting is bitwise
-identical to the no-faults relay.
+the plan's schedule, per-leaf CRC32 checksums reject corrupted deliveries
+(re-sending ONLY the rejected leaves — a flipped byte in one adapter leaf
+does not re-ship the whole tree), and the relay retries with capped
+exponential backoff. Retries and retransmitted bytes are ledgered
+(``Ledger.retries`` / ``Ledger.retransmit_bytes`` and the matching
+``RoundCost`` fields; retransmit accounting books just the resent
+leaves); a transfer that exhausts ``max_retries`` raises
+:class:`RelayTransferError`. Without a plan (or with an all-off plan) the
+accounting is bitwise identical to the no-faults relay.
 """
 from __future__ import annotations
 
@@ -38,10 +40,11 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import telemetry
 from repro.core.comm import CostModel, RoundCost, transfer_cost
-from repro.core.faults import FaultPlan, payload_checksum
+from repro.core.faults import FaultPlan, leaf_checksums
 from repro.core.peft import tree_bytes
 
 
@@ -114,13 +117,16 @@ class KnowledgeRelay:
     def _transfer(self, nbytes: int, link, field: str, payload=None):
         """One logical transfer over a (possibly lossy) link.
 
-        Books ``nbytes`` against the ledger's ``field`` per attempt (wire
-        bytes, not logical bytes) and the link's latency/energy into
-        :attr:`cost`. Under an active fault plan, attempts may be dropped
-        or corrupted; corrupted deliveries are rejected by checksum and
-        retried like drops, with capped exponential backoff latency added
-        per retry. Returns the delivered payload (the caller's tree —
-        corrupted wire copies never survive the checksum)."""
+        Books the wire bytes of each attempt against the ledger's
+        ``field`` and the link's latency/energy into :attr:`cost`. Under
+        an active fault plan, attempts may be dropped or corrupted, with
+        capped exponential backoff latency added per retry. Corruption
+        is rejected PER LEAF (:func:`faults.leaf_checksums`): only the
+        leaves whose checksums mismatch stay pending, so a retransmit
+        re-sends — and books — just the corrupted leaves, not the whole
+        tree. A link drop loses the whole attempt (every pending leaf
+        stays pending). Returns the delivered payload (the caller's tree
+        — corrupted wire copies never survive the checksum)."""
         tid, self._tid = self._tid, self._tid + 1
         tel = telemetry.get()
         plan = self.faults
@@ -131,13 +137,25 @@ class KnowledgeRelay:
             tel.count("relay.transfers")
             tel.count(f"relay.bytes.{field}", nbytes)
             return payload
-        chk = payload_checksum(payload) if payload is not None else None
+        leaves: list = []
+        leaf_chk: list = []
+        leaf_nb: list = []
+        if payload is not None:
+            leaves = jax.tree.leaves(payload)
+            leaf_chk = leaf_checksums(payload)
+            leaf_nb = [int(np.asarray(jax.device_get(x)).nbytes)
+                       for x in leaves]
+        # pending = leaf indices still owed to the receiver; the first
+        # attempt ships everything (nbytes), later attempts ship only
+        # what the last checksum compare rejected
+        pending = list(range(len(leaves)))
+        pending_nb = nbytes
         with tel.span("relay.transfer", field=field, bytes=nbytes,
                       tid=tid) as sp:
             for attempt in range(self.max_retries + 1):
                 if attempt > 0:
                     self.ledger.retries += 1
-                    self.ledger.retransmit_bytes += nbytes
+                    self.ledger.retransmit_bytes += pending_nb
                     # capped exponential base, scaled by the plan's seeded
                     # jitter draw for THIS (transfer, attempt): retries
                     # across concurrent transfers spread out instead of
@@ -149,27 +167,34 @@ class KnowledgeRelay:
                         * (1.0 + plan.retry_jitter(tid, attempt))
                     self.cost = self.cost + RoundCost(
                         backoff, 0.0, 0.0, 0, 0, retries=1,
-                        retransmit_bytes=nbytes)
+                        retransmit_bytes=pending_nb)
                     tel.count("relay.retries")
-                    tel.count("relay.retransmit_bytes", nbytes)
+                    tel.count("relay.retransmit_bytes", pending_nb)
                     tel.observe("relay.backoff_s", backoff)
                 self.ledger.transfers += 1
                 setattr(self.ledger, field,
-                        getattr(self.ledger, field) + nbytes)
-                self.cost = self.cost + transfer_cost(nbytes, link)
+                        getattr(self.ledger, field) + pending_nb)
+                self.cost = self.cost + transfer_cost(pending_nb, link)
                 tel.count("relay.transfers")
-                tel.count(f"relay.bytes.{field}", nbytes)
+                tel.count(f"relay.bytes.{field}", pending_nb)
                 lost = plan.link_drops(tid, attempt)
                 if lost:
                     tel.count("relay.link_drops")
-                if not lost and payload is not None \
+                if not lost and pending \
                         and plan.payload_corrupted(tid, attempt):
-                    # the wire copy arrives corrupted; the end-to-end
-                    # checksum rejects it and the sender retransmits
-                    recv = plan.corrupt_payload(payload, tid, attempt)
-                    lost = payload_checksum(recv) != chk
-                    if lost:
+                    # the wire copy of the PENDING leaves arrives
+                    # corrupted; compare per leaf and keep only the
+                    # rejected leaves (and their bytes) for the resend
+                    recv = plan.corrupt_payload(
+                        [leaves[i] for i in pending], tid, attempt)
+                    bad = [i for i, c in zip(pending, leaf_checksums(recv))
+                           if c != leaf_chk[i]]
+                    if bad:
                         tel.count("relay.checksum_rejects")
+                        tel.count("relay.corrupt_leaves", len(bad))
+                        pending = bad
+                        pending_nb = sum(leaf_nb[i] for i in bad)
+                        lost = True
                 if not lost:
                     sp.set(attempts=attempt + 1)
                     return payload

@@ -90,6 +90,116 @@ def _pad(x, axis, mult, value=0):
     return jnp.pad(x, w, constant_values=value)
 
 
+def _paged_kernel(tbl_ref, qpos_ref, q_ref, k_ref, v_ref, o_ref,
+                  acc_ref, m_ref, l_ref, *, scale: float, bs: int, nk: int):
+    """Block-table split-KV step: one grid step = one POOL BLOCK.
+
+    Identical online-softmax math to :func:`_kernel`; the only
+    differences are (a) K/V arrive through the scalar-prefetched block
+    table (the index_maps below gather ``pool[table[b, j]]``), and (b)
+    kv positions are implicit — pool blocks have no position plane, a
+    table slot ``j`` holds tokens ``[j*bs, (j+1)*bs)`` by construction,
+    so visibility is purely causal against ``q_pos``. Unwritten slots
+    (garbage blocks, stale data past the row's length) sit at positions
+    ``> q_pos`` and mask to an exact f32 zero, which is what makes the
+    paged path bit-identical to the dense kernel at ``block_kv == bs``.
+    """
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32)              # (g, Dp)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (bs, Dp)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    qp = qpos_ref[0, 0]                                     # scalar position
+    kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(kpos <= qp, s, NEG_INF)                   # causal only
+
+    m_prev, l_prev, acc_prev = m_ref[...], l_ref[...], acc_ref[...]
+    m_cur = jnp.max(s, axis=-1)[:, None]                    # (g, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                  # (g, bs)
+    l_new = l_prev * alpha + jnp.sum(p, axis=-1)[:, None]
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_new = acc_prev * alpha + pv
+
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(j == nk - 1)
+    def _done():
+        out = acc_new / jnp.maximum(l_new, 1e-30)
+        o_ref[0, 0, :, :] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def flash_decode_paged_pallas(q, k_pool, v_pool, table, *, q_pos,
+                              scale: Optional[float] = None,
+                              interpret: bool = False):
+    """Paged flash-decode: gather KV chunks THROUGH the block table.
+
+    q: (B, Hq, D); k_pool, v_pool: (n_blocks, bs, Hkv, D) device pool;
+    table: (B, max_blocks) int32 — row b's logical token ``t`` lives at
+    ``pool[table[b, t // bs], t % bs]``. One kv-chunk = one pool block:
+    the table rides in as a scalar-prefetch operand so the K/V
+    index_maps can dereference ``table[b, j]`` when scheduling block
+    DMAs. Causal-only (full-window decode; sliding/prefix rows stay on
+    the dense path). Out-of-pool table entries (the ``n_blocks``
+    sentinel in unwritten slots) are clamped to block 0 — those slots
+    are beyond ``q_pos`` and fully masked. Returns (B, Hq, D).
+    """
+    B, Hq, D = q.shape
+    nb, bs, Hkv, _ = k_pool.shape
+    g = Hq // Hkv
+    maxb = table.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+
+    Dp = max(128, D + (-D) % 128)
+    qp4 = _pad(q.reshape(B, Hkv, g, D), 3, Dp)
+    kp = _pad(k_pool, 3, Dp)
+    vp = _pad(v_pool, 3, Dp)
+    qpos = jnp.broadcast_to(jnp.asarray(q_pos, jnp.int32), (B,))[:, None]
+    tbl = jnp.clip(table.astype(jnp.int32), 0, nb - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, maxb),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, j, tbl: (b, 0)),
+            pl.BlockSpec((1, 1, g, Dp), lambda b, h, j, tbl: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, Dp),
+                         lambda b, h, j, tbl: (tbl[b, j], 0, h, 0)),
+            pl.BlockSpec((1, bs, 1, Dp),
+                         lambda b, h, j, tbl: (tbl[b, j], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, Dp),
+                               lambda b, h, j, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, Dp), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kernel, scale=scale, bs=bs, nk=maxb),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, Dp), q.dtype),
+        interpret=interpret,
+    )(tbl, qpos, qp4, kp, vp)
+    return out[..., :D].reshape(B, Hq, D)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "window", "causal", "scale", "block_kv", "interpret"))
 def flash_decode_pallas(q, k, v, *, q_pos, kv_pos, window: int = 0,

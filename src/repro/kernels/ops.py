@@ -316,6 +316,48 @@ def _flash_decode_xla(q, k, v, *, q_pos, kv_pos, prefix_k, prefix_v,
     return o.reshape(B, Hq, D).astype(q.dtype)
 
 
+def flash_decode_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                       table: jax.Array, *, q_pos: jax.Array,
+                       prefix_k: Optional[jax.Array] = None,
+                       prefix_v: Optional[jax.Array] = None,
+                       scale: Optional[float] = None,
+                       backend: Optional[str] = None) -> jax.Array:
+    """One decode token per sequence against a PAGED block-pool cache.
+
+    q: (B, Hq, D); k_pool, v_pool: (n_blocks, bs, Hkv, D); table:
+    (B, max_blocks) int32 block table — row b's logical token ``t``
+    lives at ``pool[table[b, t // bs], t % bs]``, so kv positions are
+    implicit slot indices (causal-only; sliding-window layers stay on
+    the dense rolling buffer). On pallas|interpret without a prefix
+    bank the block table is dereferenced inside the kernel's index_maps
+    (scalar prefetch, one kv-chunk = one block); the xla path and the
+    prefix-bank fallback gather ``pool[table]`` into the dense layout
+    and reuse :func:`_flash_decode_xla` / the dense kernel — which is
+    exactly what makes paged drains bit-identical to dense ones (same
+    visible values, masked slots contribute an exact f32 zero either
+    way). Returns (B, Hq, D) in q.dtype.
+    """
+    impl = _pick(backend)
+    nb, bs, Hkv, D = k_pool.shape
+    B, maxb = table.shape
+    if impl in ("pallas", "interpret") and prefix_k is None:
+        from repro.kernels import flash_decode as fdk
+        return fdk.flash_decode_paged_pallas(
+            q, k_pool, v_pool, table, q_pos=q_pos, scale=scale,
+            interpret=(impl == "interpret"))
+    tbl = jnp.clip(table.astype(jnp.int32), 0, nb - 1)
+    k = k_pool[tbl].reshape(B, maxb * bs, Hkv, D)
+    v = v_pool[tbl].reshape(B, maxb * bs, Hkv, D)
+    kv_pos = jnp.arange(maxb * bs, dtype=jnp.int32)
+    if impl in ("pallas", "interpret"):           # prefix bank: dense kernel
+        return flash_decode(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                            prefix_k=prefix_k, prefix_v=prefix_v,
+                            window=0, causal=True, scale=scale, backend=impl)
+    return _flash_decode_xla(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                             prefix_k=prefix_k, prefix_v=prefix_v,
+                             window=0, causal=True, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # Selective scan (Mamba-1)
 # ---------------------------------------------------------------------------

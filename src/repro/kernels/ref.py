@@ -85,6 +85,31 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return jax.vmap(one)(q, k, v, qp, kp)
 
 
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, table: jax.Array, *,
+                           q_pos: jax.Array,
+                           scale: Optional[float] = None) -> jax.Array:
+    """Naive paged decode attention: gather the block pool, then
+    :func:`decode_attention`.
+
+    q: (B, Hq, D); k_pool, v_pool: (n_blocks, bs, Hkv, D);
+    table: (B, max_blocks) int32 — logical token ``t`` of row ``b``
+    lives at ``pool[table[b, t // bs], t % bs]``, so kv positions are
+    the slot indices themselves (causal-only, no sentinel plane;
+    unwritten slots are hidden by ``kv_pos > q_pos``). Out-of-pool
+    table entries clamp to block 0 (masked the same way).
+    Returns (B, Hq, D) in q.dtype.
+    """
+    nb, bs, Hkv, D = k_pool.shape
+    B, maxb = table.shape
+    tbl = jnp.clip(table.astype(jnp.int32), 0, nb - 1)
+    k = k_pool[tbl].reshape(B, maxb * bs, Hkv, D)          # (B, T, Hkv, D)
+    v = v_pool[tbl].reshape(B, maxb * bs, Hkv, D)
+    kv_pos = jnp.arange(maxb * bs, dtype=jnp.int32)
+    return decode_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                            window=0, causal=True, scale=scale)
+
+
 def selective_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
                    C: jax.Array, D: jax.Array,
                    h0: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:

@@ -65,8 +65,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import telemetry
+from repro.core.paged import BlockAllocator, PagedSpec
 from repro.core.telemetry import Histogram, Telemetry
 from repro.models import model as M
+from repro.models.transformer import groups_for, paged_subs
+from repro.sharding.rules import init_from_spec
 
 
 def _pow2ceil(n: int) -> int:
@@ -93,6 +96,9 @@ class Request:
                                        # (it then decodes plainly THROUGH
                                        # the verify pass — mixed waves)
     t_submit_wall: float = 0.0         # informational ONLY (never compared)
+    sla: Optional[str] = None          # service class label: per-class
+                                       # TTFT/queue histograms + deadline-
+                                       # miss counters (EngineStats.sla_stats)
 
 
 @dataclasses.dataclass
@@ -144,6 +150,27 @@ class EngineStats:
     ttft_hist: Optional[dict] = None       # time-to-first-token (s)
     queue_hist: Optional[dict] = None      # queue wait (s)
     tok_latency_hist: Optional[dict] = None  # per-token decode latency (s)
+    # SLA classes (submit(sla=...)): per-class latency distributions +
+    # deadline misses — {cls: {ttft_hist, queue_hist, deadline_miss,
+    # requests}}. None when no request carried a class label.
+    sla_stats: Optional[dict] = None
+    # paged serving (DecodeEngine(paged=PagedSpec(...))):
+    pool_block_size: int = 0           # tokens per pool block (0 = dense)
+    pool_peak_blocks: int = 0          # max simultaneously-referenced blocks
+    pool_blocks_alloc: int = 0         # private blocks allocated this drain
+    cache_tokens: int = 0              # prompt+budget tokens placed in NEW
+                                       # blocks (shared prefixes counted once)
+    prefix_hits: int = 0               # admissions that matched a cached prefix
+    prefix_hit_tokens: int = 0         # prompt tokens served from shared blocks
+
+    @property
+    def pool_occupancy(self) -> float:
+        """Paged: useful tokens per allocated pool-block token. Blocks are
+        sized per request (ceil over block_size), so this dominates the
+        dense-slab utilization sum(len+gen)/(N*cap) — the slab pads every
+        row to the drain-wide pow2 cap."""
+        denom = self.pool_blocks_alloc * self.pool_block_size
+        return self.cache_tokens / denom if denom else 0.0
 
     @property
     def tok_per_s(self) -> float:
@@ -167,7 +194,8 @@ class DecodeEngine:
 
     def __init__(self, cfg, *, slots: int = 8, greedy: bool = True,
                  seed: int = 0, bank=None, mesh=None, spec=None,
-                 tel: Optional[Telemetry] = None):
+                 tel: Optional[Telemetry] = None,
+                 paged: Optional[PagedSpec] = None):
         self.cfg = cfg
         self.slots = slots
         self.greedy = greedy
@@ -200,6 +228,38 @@ class DecodeEngine:
         # AdapterBank(mesh=...)); drains stay token-identical to unsharded
         # serving (see tests/test_mesh_sharding.py).
         self.mesh = mesh
+        # paged serving: the per-slot dense cache slab is replaced by a
+        # device block pool + per-row block tables (models/attention.py)
+        # and this HOST-side refcounted allocator (core/paged.py). The
+        # pool and allocator persist ACROSS drains — freed blocks keep
+        # their prefix hash on the LRU free list, so a later drain's
+        # matching prompt revives them without re-prefilling.
+        self.paged = paged
+        self._pool: Optional[dict] = None
+        self._alloc: Optional[BlockAllocator] = None
+        self._psubs: list[tuple[str, str]] = []
+        self._slot_blocks: list[Optional[dict]] = [None] * slots
+        self._arrivals: deque = deque()    # serve_trace timed admissions
+        self._trace_t0 = 0.0
+        if paged is not None:
+            if spec is not None:
+                raise ValueError(
+                    "paged serving composes with plain decode only "
+                    "(speculative verify reads the dense slot layout; "
+                    "paged verify is a recorded follow-up)")
+            if cfg.family in ("audio", "vlm"):
+                raise ValueError(
+                    f"paged serving does not support the {cfg.family} "
+                    "family (modality prefixes address the dense slab)")
+            self._psubs = paged_subs(cfg)
+            if paged.share_prefix:
+                n_subs = sum(len(kinds) for _, kinds, _ in groups_for(cfg))
+                if len(self._psubs) != n_subs or not self._psubs:
+                    raise ValueError(
+                        "share_prefix requires a fully paged stack (every "
+                        "sub-layer full-window attention/moe): suffix-only "
+                        "prefill has no partial-stack path")
+            self._alloc = BlockAllocator(paged.n_blocks, paged.block_size)
         self.slot_table = [Slot() for _ in range(slots)]
         self._queue: deque[Request] = deque()
         self._uid = 0
@@ -210,7 +270,8 @@ class DecodeEngine:
                extras: Optional[dict] = None,
                domain: Optional[str] = None,
                deadline_s: Optional[float] = None,
-               speculative: bool = True) -> int:
+               speculative: bool = True,
+               sla: Optional[str] = None) -> int:
         """Enqueue one request; returns its uid. ``extras`` is one modality
         row per key (e.g. ``{"vision_embeds": (n_vis, d)}`` — no batch dim);
         it stays bound to this request across wave packing. ``domain`` names
@@ -220,7 +281,10 @@ class DecodeEngine:
         mid-wave as a ``timed_out`` completion with its partial tokens.
         ``speculative=False`` opts this row out of drafting on a spec
         engine (it decodes plainly through the verify pass; ignored on
-        plain engines).
+        plain engines). ``sla`` labels this request's service class:
+        TTFT/queue-wait land in per-class histograms and a deadline
+        retirement books a per-class miss (``EngineStats.sla_stats``,
+        ``engine.deadline_miss.<cls>`` counters).
 
         Malformed requests fail HERE with ``ValueError`` — an empty or
         non-1-D prompt, a non-positive token budget, or an unknown domain
@@ -237,6 +301,14 @@ class DecodeEngine:
         if deadline_s is not None and deadline_s < 0:
             raise ValueError(
                 f"submit: deadline_s must be >= 0, got {deadline_s}")
+        if self.paged is not None:
+            need = -(-(tokens.size + int(max_new_tokens))
+                     // self.paged.block_size)
+            if need > self.paged.n_blocks:
+                raise ValueError(
+                    f"submit: request needs {need} pool blocks but the "
+                    f"pool only has {self.paged.n_blocks} — it could "
+                    "never be admitted")
         if domain is not None:
             if self.bank is None:
                 raise ValueError("submit(domain=...) requires an engine "
@@ -258,7 +330,7 @@ class DecodeEngine:
         self._uid += 1
         self._queue.append(Request(uid, tokens, int(max_new_tokens), extras,
                                    domain, deadline_s, time.perf_counter(),
-                                   bool(speculative), time.time()))
+                                   bool(speculative), time.time(), sla))
         self._telemetry().count("engine.submitted")
         return uid
 
@@ -271,15 +343,84 @@ class DecodeEngine:
     # -- packing ------------------------------------------------------------
     def _fill_slots(self) -> list[tuple[int, Request]]:
         """Assign queued requests to free slots FIFO (no length bucketing).
-        Returns [(slot_index, request)] for the rows to (re-)prefill."""
+        Returns [(slot_index, request)] for the rows to (re-)prefill.
+
+        Paged admission is block-gated: the head request's pool blocks
+        (shared prefix refs + private blocks for prompt tail and budget)
+        must all be reservable NOW, else packing stops head-of-line — a
+        later retirement frees blocks and the next segment boundary
+        retries. FIFO order is preserved either way."""
         packed: list[tuple[int, Request]] = []
         for i, slot in enumerate(self.slot_table):
             if slot.active or not self._queue:
                 continue
+            if self.paged is not None:
+                plan = self._plan_blocks(self._queue[0])
+                if plan is None:
+                    break                     # pool full: wait for a retire
+                self._slot_blocks[i] = plan
             req = self._queue.popleft()
             slot.assign(req)
             packed.append((i, req))
         return packed
+
+    def _plan_blocks(self, req: Request) -> Optional[dict]:
+        """Reserve one request's pool blocks, or None if they don't fit.
+
+        ``shared`` are prefix-cache hits (acquired, never written:
+        copy-on-write by construction); ``owned`` are freshly allocated
+        private blocks covering the prompt tail + decode budget. The
+        match is capped at (len-1)//bs blocks so every row keeps at
+        least one private suffix token — the suffix pass needs a token
+        to produce the row's first logits from."""
+        ps, alloc = self.paged, self._alloc
+        total = -(-(len(req.tokens) + req.max_new_tokens) // ps.block_size)
+        shared: list[int] = []
+        if ps.share_prefix:
+            ids, _ = alloc.match_prefix(req.tokens)
+            shared = ids[:min(len(ids), (len(req.tokens) - 1)
+                              // ps.block_size)]
+        need = total - len(shared)
+        # reviving a dead (rc==0) shared block consumes a free-list slot
+        # too, so feasibility is checked BEFORE touching refcounts
+        revive = sum(1 for b in shared if alloc.refcount[b] == 0)
+        if need + revive > alloc.free_blocks:
+            return None
+        for b in shared:
+            alloc.acquire(b)
+        owned = alloc.alloc(need) if need else []
+        # publish full-prefill rows' prompt blocks AT PLAN TIME so a
+        # same-wave sibling already matches them (its suffix dispatch
+        # consumes the prefill's output pool — device data dependence
+        # orders the commit before any shared read). HIT rows stay
+        # private: their suffix K/V is chunk-pass math, not bitwise
+        # dense-prefill state.
+        if ps.share_prefix and not shared:
+            alloc.register(req.tokens, owned)
+        return {"owned": owned, "shared": shared}
+
+    def _ensure_pool(self) -> None:
+        """Materialize the persistent device block pool (zeros) lazily —
+        one (L, n_blocks, bs, Hkv, D) k/v pair per eligible sub-layer,
+        shared by every drain this engine ever runs."""
+        if self._pool is not None:
+            return
+        ps = self.paged
+        spec = M.cache_spec(self.cfg, 1, ps.block_size,
+                            paged=(ps.n_blocks, ps.block_size))
+        pool: dict = {}
+        for g, s in self._psubs:
+            sub = spec[g][s]
+            pool.setdefault(g, {})[s] = init_from_spec(
+                jax.random.PRNGKey(0), {"k": sub["k"], "v": sub["v"]})
+        self._pool = pool
+
+    def _admit_due(self) -> None:
+        """serve_trace: submit every arrival whose timestamp has passed."""
+        while self._arrivals and \
+                time.perf_counter() - self._trace_t0 >= self._arrivals[0][0]:
+            _, tokens, gen, kw = self._arrivals.popleft()
+            self.submit(tokens, gen, **kw)
 
     def _check_extras(self) -> frozenset:
         """Validate the all-or-none extras-keys invariant across the drain."""
@@ -304,18 +445,30 @@ class DecodeEngine:
         every request alone."""
         stats = EngineStats()
         out: list[Completion] = []
-        if not self._queue:
+        if not self._queue and not self._arrivals:
             return out, stats
         tel = self._telemetry()
         # drain-local latency histograms: always on (a few clock reads per
         # DISPATCH, never per token), summarized into EngineStats at exit
         h_ttft, h_queue, h_tok = Histogram(), Histogram(), Histogram()
+        # per-SLA-class distributions (submit(sla=...)): lazily created
+        # {cls: {"ttft": Histogram, "queue": Histogram, "miss": n, "n": n}}
+        sla_acc: dict[str, dict] = {}
         t_all = time.perf_counter()
         extras_keys = self._check_extras()
-        tenant = self._queue[0].domain is not None
+        tenant = bool(self._queue) and self._queue[0].domain is not None
         # cache capacity: one size per drain keeps every refill shape-stable
-        cap = _pow2ceil(max(len(r.tokens) + r.max_new_tokens
-                            for r in self._queue))
+        # (timed arrivals not yet submitted count too — they join THIS drain)
+        cap = _pow2ceil(max(
+            [len(r.tokens) + r.max_new_tokens for r in self._queue]
+            + [e[1].size + e[2] for e in self._arrivals]))
+        bs_ = nb_ = maxb = 0
+        if self.paged is not None:
+            bs_, nb_ = self.paged.block_size, self.paged.n_blocks
+            cap = max(cap, bs_)            # pow2 cap >= pow2 bs divides evenly
+            maxb = cap // bs_
+            self._ensure_pool()
+            stats.pool_block_size = bs_
         B = self.slots
         slot_req: list[Optional[Request]] = [None] * B
         slot_wave = [0] * B
@@ -353,6 +506,23 @@ class DecodeEngine:
             if ttft is not None:
                 h_ttft.record(ttft)
                 tel.observe("engine.ttft_s", ttft)
+            if req.sla is not None:
+                acc = sla_acc.setdefault(
+                    req.sla, {"ttft": Histogram(), "queue": Histogram(),
+                              "miss": 0, "n": 0})
+                acc["n"] += 1
+                acc["queue"].record(t_admit[i] - req.t_submit)
+                if ttft is not None:
+                    acc["ttft"].record(ttft)
+                    tel.observe(f"engine.ttft_s.{req.sla}", ttft)
+                if timed_out:
+                    acc["miss"] += 1
+                    tel.count(f"engine.deadline_miss.{req.sla}")
+            if self.paged is not None and self._slot_blocks[i] is not None:
+                pb = self._slot_blocks[i]
+                self._alloc.free(pb["owned"] + pb["shared"])
+                self._slot_blocks[i] = None
+                tel.gauge("engine.pool_blocks_used", self._alloc.used_blocks)
             tel.count("engine.retired")
             tel.record_span("engine.request", req.t_submit, now,
                             uid=req.uid, wave=slot_wave[i],
@@ -365,10 +535,24 @@ class DecodeEngine:
 
         drain = tel.span("engine.drain", slots=B, queued=len(self._queue))
         drain.__enter__()
-        while self._queue or remaining.any():
+        while self._queue or remaining.any() or self._arrivals:
+            self._admit_due()
+            if not self._queue and not remaining.any():
+                # arrival-driven drain, nothing live yet: sleep toward the
+                # next arrival instead of spinning (capped so a deadline
+                # sweep never starves)
+                dt = self._trace_t0 + self._arrivals[0][0] \
+                    - time.perf_counter()
+                if dt > 0:
+                    time.sleep(min(dt, 0.025))
+                continue
             packed = self._fill_slots()
             if packed:
                 stats.waves += 1
+                # a drain admitted entirely from a timed trace learns its
+                # tenancy from the first packed wave (submit() enforces
+                # the all-or-none invariant queue-wide)
+                tenant = packed[0][1].domain is not None
                 t_adm = time.perf_counter()    # queue wait ends at admission
                 for i, req in packed:
                     slot_req[i], slot_wave[i] = req, stats.waves - 1
@@ -378,6 +562,25 @@ class DecodeEngine:
                     t_admit[i], t_first[i] = t_adm, None
                     h_queue.record(t_adm - req.t_submit)
                     tel.observe("engine.queue_s", t_adm - req.t_submit)
+                    if self.paged is not None:
+                        pb = self._slot_blocks[i]
+                        nshared = len(pb["shared"])
+                        stats.pool_blocks_alloc += len(pb["owned"])
+                        stats.cache_tokens += (len(req.tokens)
+                                               + req.max_new_tokens
+                                               - nshared * bs_)
+                        if nshared:
+                            stats.prefix_hits += 1
+                            stats.prefix_hit_tokens += nshared * bs_
+                            tel.count("engine.prefix_hits")
+                if self.paged is not None:
+                    stats.pool_peak_blocks = max(stats.pool_peak_blocks,
+                                                 self._alloc.used_blocks)
+                    tel.gauge("engine.pool_blocks_used",
+                              self._alloc.used_blocks)
+                    tel.gauge("engine.pool_blocks_shared",
+                              sum(1 for rc in self._alloc.refcount
+                                  if rc > 1))
                 live = [i for i in range(B) if slot_req[i] is not None]
                 if tenant:                     # full-wave ids for segments
                     doms = [cur_dom[i] if cur_dom[i] is not None
@@ -387,7 +590,110 @@ class DecodeEngine:
                 # right-pad the PACKED prompts to a pow2 width (jit-shape
                 # bucketing both dims keeps the compile cache O(log² cap))
                 S_pad = _pow2ceil(max(len(req.tokens) for _, req in packed))
-                if caches is None:
+                if self.paged is not None:
+                    # paged waves: dense-prefill the packed rows, then
+                    # commit their K/V into the block pool through the
+                    # host-built tables. Prefix-HIT rows skip the main
+                    # prefill entirely (1-token dummies, all-sentinel
+                    # tables) and are admitted by a suffix-only chunk
+                    # dispatch right after — the shared blocks are never
+                    # re-prefilled (and never re-written: copy-on-write).
+                    full_p = [(i, r) for i, r in packed
+                              if not self._slot_blocks[i]["shared"]]
+                    hit_p = [(i, r) for i, r in packed
+                             if self._slot_blocks[i]["shared"]]
+
+                    def table_row(i: int) -> np.ndarray:
+                        pb = self._slot_blocks[i]
+                        row = np.full(maxb, nb_, np.int32)
+                        ids_b = pb["shared"] + pb["owned"]
+                        row[:len(ids_b)] = ids_b
+                        return row
+
+                    if caches is None:
+                        prompts = np.zeros((B, S_pad), np.int32)
+                        lens = np.ones(B, np.int32)
+                        tables = np.full((B, maxb), nb_, np.int32)
+                        for i, req in full_p:
+                            prompts[i, :len(req.tokens)] = req.tokens
+                            lens[i] = len(req.tokens)
+                            tables[i] = table_row(i)
+                        batch = {"tokens": jnp.asarray(prompts),
+                                 **self._stack_extras(
+                                     [cur_extras[i] for i in range(B)],
+                                     extras_keys, live)}
+                        with tel.span("engine.prefill",
+                                      wave=stats.waves - 1,
+                                      rows=len(full_p), seq=S_pad,
+                                      paged=True):
+                            tok, caches, pos = M._paged_prefill_fn(
+                                self.cfg, cap, bs_, self.mesh)(
+                                wp, batch, jnp.asarray(lens),
+                                jnp.asarray(tables), self._pool, ids)
+                    elif full_p:
+                        Br = min(_pow2ceil(len(full_p)), _pow2ceil(B))
+                        prompts = np.zeros((Br, S_pad), np.int32)
+                        lens = np.ones(Br, np.int32)
+                        row_idx = np.full(Br, B, np.int32)
+                        tables_r = np.full((Br, maxb), nb_, np.int32)
+                        for r, (i, req) in enumerate(full_p):
+                            prompts[r, :len(req.tokens)] = req.tokens
+                            lens[r] = len(req.tokens)
+                            row_idx[r] = i
+                            tables_r[r] = table_row(i)
+                        rex = [cur_extras[i] for i, _ in full_p]
+                        rex += [rex[0]] * (Br - len(full_p))
+                        batch = {"tokens": jnp.asarray(prompts),
+                                 **self._stack_extras(rex, extras_keys,
+                                                      [0])}
+                        ids_rows = None
+                        if tenant:
+                            rdom = [req.domain for _, req in full_p]
+                            rdom += [rdom[0]] * (Br - len(full_p))
+                            ids_rows = self.bank.adapter_ids(rdom)
+                        with tel.span("engine.refill",
+                                      wave=stats.waves - 1,
+                                      rows=len(full_p), seq=S_pad,
+                                      paged=True):
+                            tok, caches, pos = M._paged_refill_fn(
+                                self.cfg, cap, bs_, self.mesh)(
+                                wp, batch, jnp.asarray(lens),
+                                jnp.asarray(row_idx),
+                                jnp.asarray(tables_r),
+                                tok, caches, pos, ids_rows)
+                    if hit_p:
+                        Br = min(_pow2ceil(len(hit_p)), _pow2ceil(B))
+                        W = _pow2ceil(max(
+                            len(r.tokens)
+                            - len(self._slot_blocks[i]["shared"]) * bs_
+                            for i, r in hit_p))
+                        suf = np.zeros((Br, W), np.int32)
+                        slens = np.zeros(Br, np.int32)
+                        starts = np.zeros(Br, np.int32)
+                        row_idx = np.full(Br, B, np.int32)
+                        tables_r = np.full((Br, maxb), nb_, np.int32)
+                        for r, (i, req) in enumerate(hit_p):
+                            st = len(self._slot_blocks[i]["shared"]) * bs_
+                            tail = req.tokens[st:]
+                            suf[r, :len(tail)] = tail
+                            slens[r], starts[r] = len(tail), st
+                            row_idx[r] = i
+                            tables_r[r] = table_row(i)
+                        ids_rows = None
+                        if tenant:
+                            rdom = [req.domain for _, req in hit_p]
+                            rdom += [rdom[0]] * (Br - len(hit_p))
+                            ids_rows = self.bank.adapter_ids(rdom)
+                        with tel.span("engine.suffix",
+                                      wave=stats.waves - 1,
+                                      rows=len(hit_p), seq=W):
+                            tok, caches, pos = M._paged_suffix_fn(
+                                self.cfg, cap, bs_, self.mesh)(
+                                wp, jnp.asarray(suf), jnp.asarray(slens),
+                                jnp.asarray(starts), jnp.asarray(row_idx),
+                                jnp.asarray(tables_r), tok, caches, pos,
+                                ids_rows)
+                elif caches is None:
                     # initial wave prefill: all B slots (empty slots carry
                     # 1-token dummies and retire immediately)
                     prompts = np.zeros((B, S_pad), np.int32)
@@ -536,10 +842,24 @@ class DecodeEngine:
             stats.tokens += served_now
             stats.padded_tokens += executed - served_now
             tel.observe("engine.segment_s", seg_wall)
+        if self.paged is not None and caches is not None:
+            # persist the committed pool across drains: a freed block's
+            # K/V stays addressable until its slot is actually reused,
+            # which is what lets a later drain's matching prompt revive
+            # it (LRU free list keeps the hash — core/paged.py)
+            for g, s in self._psubs:
+                c = caches[g][s]
+                self._pool[g][s] = {"k": c["k"], "v": c["v"]}
         stats.wall_s = time.perf_counter() - t_all
         stats.ttft_hist = h_ttft.summary()
         stats.queue_hist = h_queue.summary()
         stats.tok_latency_hist = h_tok.summary()
+        if sla_acc:
+            stats.sla_stats = {
+                cls: {"ttft_hist": a["ttft"].summary(),
+                      "queue_hist": a["queue"].summary(),
+                      "deadline_miss": a["miss"], "requests": a["n"]}
+                for cls, a in sla_acc.items()}
         tel.count("engine.tokens", stats.tokens)
         tel.count("engine.padded_tokens", stats.padded_tokens)
         drain.set(requests=stats.requests, tokens=stats.tokens,
@@ -587,3 +907,27 @@ class DecodeEngine:
         comps, stats = self.run(params)
         by_uid = {c.uid: c.tokens for c in comps}
         return np.stack([by_uid[u] for u in uids]), stats
+
+    def serve_trace(self, params, trace
+                    ) -> tuple[list[Completion], EngineStats]:
+        """Serve a TIMED arrival trace with arrival-driven admission.
+
+        ``trace`` is an iterable of ``(t_s, tokens, gen)`` or
+        ``(t_s, tokens, gen, submit_kwargs)`` arrivals; ``t_s`` is the
+        arrival offset in seconds from the drain start. Unlike
+        :meth:`serve` (which front-loads the whole queue), requests are
+        ``submit``-ted only when their timestamp comes due inside the
+        running drain — queue wait and TTFT measure the engine under
+        the OFFERED load (Poisson in benchmarks/latency_bench.py), and
+        on a paged engine admission is additionally block-gated, so a
+        burst beyond pool capacity queues head-of-line until blocks
+        free. Returns (completions, stats) like :meth:`run`."""
+        ev = sorted(((float(e[0]), np.asarray(e[1], np.int32), int(e[2]),
+                      dict(e[3]) if len(e) > 3 else {}) for e in trace),
+                    key=lambda e: e[0])
+        self._arrivals = deque(ev)
+        self._trace_t0 = time.perf_counter()
+        try:
+            return self.run(params)
+        finally:
+            self._arrivals = deque()

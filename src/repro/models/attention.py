@@ -216,7 +216,16 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
     mixes rows at different sequence positions (ragged continuous
     batching). ``active`` (B,) bool retires rows in place: an inactive
     row's cache write is routed out of bounds and dropped, freezing its
-    cache while the wave keeps decoding other rows."""
+    cache while the wave keeps decoding other rows.
+
+    A PAGED cache (``{'k','v'}`` block pools (n_blocks, bs, Hkv, D) +
+    ``'table'`` (B, max_blocks)) is detected by its ``table`` leaf: the
+    slot scatter becomes a block-table-indirected write
+    ``pos -> (table[b, pos // bs], pos % bs)`` and attention dispatches
+    to :func:`ops.flash_decode_paged`. Distinct live rows always write
+    distinct blocks (the allocator never shares a row's TAIL block), so
+    the batched scatter stays race-free; inactive and pad rows route to
+    the ``n_blocks`` sentinel and are dropped."""
     B = x.shape[0]
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
     lora = (adapters or {}).get("lora", {})
@@ -242,20 +251,39 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
         if use_rope:
             k1 = rope(k1, pos[:, None], cfg.rope_theta)
         v1 = v1.reshape(B, 1, nkv, hd)
-        T = cache["k"].shape[1]
-        slot = (pos % window) if window and window > 0 else pos
-        if active is not None:           # retired rows: write out of bounds
-            slot = jnp.where(active, slot, T)
-        rows = jnp.arange(B)
-        k = cache["k"].at[rows, slot].set(
-            k1[:, 0].astype(cache["k"].dtype), mode="drop")
-        v = cache["v"].at[rows, slot].set(
-            v1[:, 0].astype(cache["v"].dtype), mode="drop")
-        kv_pos = cache["pos"].at[rows, slot].set(pos, mode="drop")
-        new_cache = {"k": k, "v": v, "pos": kv_pos}
+        if "table" in cache:             # paged: block-table indirected write
+            table = cache["table"]
+            nb, bs = cache["k"].shape[0], cache["k"].shape[1]
+            blk = jnp.take_along_axis(table, (pos // bs)[:, None],
+                                      axis=1)[:, 0]
+            if active is not None:       # retired rows: write out of bounds
+                blk = jnp.where(active, blk, nb)
+            off = pos % bs
+            k = cache["k"].at[blk, off].set(
+                k1[:, 0].astype(cache["k"].dtype), mode="drop")
+            v = cache["v"].at[blk, off].set(
+                v1[:, 0].astype(cache["v"].dtype), mode="drop")
+            new_cache = {"k": k, "v": v, "table": table}
+            kv_pos = None                # implicit: slot index == position
+        else:
+            T = cache["k"].shape[1]
+            slot = (pos % window) if window and window > 0 else pos
+            if active is not None:       # retired rows: write out of bounds
+                slot = jnp.where(active, slot, T)
+            rows = jnp.arange(B)
+            k = cache["k"].at[rows, slot].set(
+                k1[:, 0].astype(cache["k"].dtype), mode="drop")
+            v = cache["v"].at[rows, slot].set(
+                v1[:, 0].astype(cache["v"].dtype), mode="drop")
+            kv_pos = cache["pos"].at[rows, slot].set(pos, mode="drop")
+            new_cache = {"k": k, "v": v, "pos": kv_pos}
 
-    k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
-    v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    if "table" not in cache:
+        k = shard(k, "batch", "kv_seq", "kv_heads", "head_dim")
+        v = shard(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    else:
+        k = shard(k, "kv_blocks", None, "kv_heads", "head_dim")
+        v = shard(v, "kv_blocks", None, "kv_heads", "head_dim")
 
     # Single-token attention is kernel-dispatched: the XLA path keeps the
     # separate prefix bank + online-softmax merge (§Perf d2 — concatenating
@@ -270,11 +298,16 @@ def attention_decode(params: dict, adapters: Optional[dict], x: jax.Array,
             pfx_v = jnp.take(pfx["v"], adapter_ids, axis=0)
         else:
             pfx_k, pfx_v = pfx["k"], pfx["v"]
-    o = kops.flash_decode(
-        q[:, 0], k, v, q_pos=pos.astype(jnp.int32),
-        kv_pos=kv_pos.astype(jnp.int32),
-        prefix_k=pfx_k, prefix_v=pfx_v,
-        window=0 if cross else window, causal=not cross)
+    if "table" in cache:
+        o = kops.flash_decode_paged(
+            q[:, 0], k, v, cache["table"], q_pos=pos.astype(jnp.int32),
+            prefix_k=pfx_k, prefix_v=pfx_v)
+    else:
+        o = kops.flash_decode(
+            q[:, 0], k, v, q_pos=pos.astype(jnp.int32),
+            kv_pos=kv_pos.astype(jnp.int32),
+            prefix_k=pfx_k, prefix_v=pfx_v,
+            window=0 if cross else window, causal=not cross)
     o = o.reshape(B, 1, nh * hd).astype(x.dtype)
     y = _proj(o, params["wo"], None, lora.get("o"), lscale, adapter_ids)
     return y, new_cache
@@ -366,18 +399,110 @@ def attention_verify(params: dict, adapters: Optional[dict], x: jax.Array,
     return y, new_cache
 
 
+def attention_chunk_paged(params: dict, adapters: Optional[dict],
+                          x: jax.Array, cache: dict, cfg: ModelConfig, *,
+                          start: jax.Array, valid: jax.Array,
+                          adapter_ids: Optional[jax.Array] = None):
+    """Chunked continuation prefill against a PAGED cache (prefix sharing).
+
+    A prefix-cache hit row skips re-prefilling its shared blocks: only
+    the private SUFFIX runs through the stack, as a length-W chunk per
+    row. x: (B, W, d) — row b's chunk occupies absolute positions
+    ``start[b] .. start[b]+W-1``; ``valid`` (B, W) masks real suffix
+    tokens (right padding). The chunk's K/V scatter into the row's
+    private blocks through the table (invalid positions route to the
+    ``n_blocks`` sentinel and drop), then every chunk query attends the
+    updated pool gathered through the table — shared prefix blocks are
+    READ here but never written, which is the copy-on-write guarantee.
+    W is a suffix (typically < block_size tokens past the shared
+    prefix), so the attention is plain jnp GQA like
+    :func:`attention_verify`. Returns (out (B, W, d), new_cache)."""
+    B, W = x.shape[:2]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    lora = (adapters or {}).get("lora", {})
+    lscale = cfg.peft.lora_alpha / max(cfg.peft.lora_rank, 1)
+    start = jnp.broadcast_to(jnp.asarray(start, jnp.int32), (B,))
+    qpos = start[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]  # (B, W)
+
+    q = _proj(x, params["wq"], params.get("bq"), lora.get("q"), lscale,
+              adapter_ids).reshape(B, W, nh, hd)
+    k1 = _proj(x, params["wk"], params.get("bk"), lora.get("k"), lscale,
+               adapter_ids).reshape(B, W, nkv, hd)
+    v1 = _proj(x, params["wv"], params.get("bv"), lora.get("v"), lscale,
+               adapter_ids).reshape(B, W, nkv, hd)
+    q = rope(q, qpos, cfg.rope_theta)
+    k1 = rope(k1, qpos, cfg.rope_theta)
+
+    table = cache["table"]
+    nb, bs = cache["k"].shape[0], cache["k"].shape[1]
+    blk = jnp.take_along_axis(table, jnp.clip(qpos // bs, 0,
+                                              table.shape[1] - 1), axis=1)
+    blk = jnp.where(valid, blk, nb)               # pad tokens: dropped
+    off = qpos % bs
+    pool_k = cache["k"].at[blk, off].set(k1.astype(cache["k"].dtype),
+                                         mode="drop")
+    pool_v = cache["v"].at[blk, off].set(v1.astype(cache["v"].dtype),
+                                         mode="drop")
+    new_cache = {"k": pool_k, "v": pool_v, "table": table}
+
+    tbl = jnp.clip(table, 0, nb - 1)
+    kg = pool_k[tbl].reshape(B, -1, nkv, hd)      # (B, cap, Hkv, D)
+    vg = pool_v[tbl].reshape(B, -1, nkv, hd)
+    kv_pos = jnp.broadcast_to(
+        jnp.arange(kg.shape[1], dtype=jnp.int32)[None], (B, kg.shape[1]))
+    kp, vp, n_p = _with_prefix(kg, vg, adapters, B, adapter_ids)
+    if n_p:
+        kv_pos = jnp.concatenate(
+            [jnp.full((B, n_p), -1, jnp.int32), kv_pos], axis=1)
+
+    vis = kv_pos[:, None, :] <= qpos[:, :, None]  # causal (B, W, cap)
+    vis |= kv_pos[:, None, :] < 0                 # prefix slots
+    g = nh // nkv
+    qf = q.reshape(B, W, nkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("btngd,bsnd->bngts", qf,
+                        kp.astype(jnp.float32)) * (hd ** -0.5)
+    scores = jnp.where(vis[:, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bngts,bsnd->btngd", probs, vp.astype(jnp.float32))
+    o = o.reshape(B, W, nh * hd).astype(x.dtype)
+    y = _proj(o, params["wo"], None, lora.get("o"), lscale, adapter_ids)
+    return y, new_cache
+
+
 def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, *,
-               window: int = 0, layers: Optional[int] = None) -> dict:
+               window: int = 0, layers: Optional[int] = None,
+               paged: Optional[tuple] = None) -> dict:
     """ParamSpec tree for a (stacked-over-layers) KV cache.
 
     The sliding-window cache is a rolling buffer of exactly ``window``
     slots — what the prefill path actually builds — regardless of how
     ``seq_len`` compares to the window. ``pos`` is per-row (B, S): each
-    batch row tracks its own written slots (ragged serving)."""
+    batch row tracks its own written slots (ragged serving).
+
+    ``paged=(n_blocks, block_size)`` describes the PAGED layout instead
+    (full-window layers only): a layer-stacked device block pool
+    ``(L, n_blocks, bs, Hkv, D)`` shared by every row — sharded over
+    ``kv_blocks`` (the data axis) instead of per-row ``kv_seq`` — plus
+    per-row block tables ``(L, B, ceil(seq_len/bs))``. There is no
+    ``pos`` plane: a table slot ``j`` holds positions ``[j*bs,(j+1)*bs)``
+    by construction, so visibility is purely causal."""
     L = layers if layers is not None else cfg.n_layers
     nkv, hd = cfg.n_kv_heads, cfg.head_dim_
     S = window if window and window > 0 else seq_len
     dt = jnp.dtype(cfg.dtype)
+    if paged is not None and not (window and window > 0):
+        nb, bs = paged
+        maxb = -(-seq_len // bs)
+        return {
+            "k": ParamSpec((L, nb, bs, nkv, hd), dt,
+                           (None, "kv_blocks", None, "kv_heads", "head_dim"),
+                           init="zeros"),
+            "v": ParamSpec((L, nb, bs, nkv, hd), dt,
+                           (None, "kv_blocks", None, "kv_heads", "head_dim"),
+                           init="zeros"),
+            "table": ParamSpec((L, batch, maxb), jnp.int32,
+                               (None, "batch", None), init="zeros"),
+        }
     return {
         "k": ParamSpec((L, batch, S, nkv, hd), dt,
                        (None, "batch", "kv_seq", "kv_heads", "head_dim"),

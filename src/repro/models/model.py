@@ -18,8 +18,9 @@ from repro.models import encdec
 from repro.models.layers import (cross_entropy, embed, embed_spec, rmsnorm,
                                  rmsnorm_spec, unembed)
 from repro.models.transformer import (adapter_stack_spec, cache_group_spec,
-                                      rec_cache_part, stack_decode, stack_seq,
-                                      stack_spec, stack_verify)
+                                      paged_subs, rec_cache_part, stack_chunk,
+                                      stack_decode, stack_seq, stack_spec,
+                                      stack_verify)
 from repro.sharding.rules import (ParamSpec, init_from_spec, serving_rules,
                                   shard, use_rules)
 
@@ -63,10 +64,14 @@ def init(cfg: ModelConfig, key: jax.Array) -> dict:
     return init_from_spec(key, model_spec(cfg))
 
 
-def cache_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+def cache_spec(cfg: ModelConfig, batch: int, seq_len: int, *,
+               paged=None) -> dict:
+    """``paged=(n_blocks, block_size)`` describes the paged layout for the
+    eligible (full-window attention) sub-layers — see
+    transformer.cache_group_spec / attention.cache_spec."""
     if cfg.family == "audio":
         return encdec.encdec_cache_spec(cfg, batch, seq_len)
-    return cache_group_spec(cfg, batch, seq_len)
+    return cache_group_spec(cfg, batch, seq_len, paged=paged)
 
 
 # ---------------------------------------------------------------------------
@@ -381,6 +386,172 @@ def _segment_fn(cfg: ModelConfig, steps: int, greedy: bool, mesh=None):
     return jax.jit(impl)
 
 
+# -- paged KV cache (block pool + per-row tables) ---------------------------
+
+def _pool_commit(pool_sub: dict, dense_k, dense_v, tables, lens):
+    """Scatter dense prefill K/V for B rows into the block pool.
+
+    pool_sub: {'k','v'[,'table']} with pool leaves (L, nb, bs, Hkv, D);
+    dense_k/v: (L, B, S_pad, ...) freshly prefilled rows; tables:
+    (B, maxb) int32 block tables; lens: (B,) valid lengths. Token ``t``
+    of row ``b`` lands at ``pool[:, tables[b, t//bs], t%bs]``; tokens at
+    or beyond ``lens[b]`` route to the ``nb`` sentinel and drop (pad
+    rows and prefix-HIT rows are excluded by an all-sentinel table /
+    lens of 1 over a dummy prompt... their real state arrives via
+    :func:`_paged_suffix_fn`). The values written are EXACTLY the dense
+    prefill's — which is what keeps paged drains bit-identical."""
+    nb, bs = pool_sub["k"].shape[1], pool_sub["k"].shape[2]
+    S_pad = dense_k.shape[2]
+    t_idx = jnp.arange(S_pad, dtype=jnp.int32)
+    blk = jnp.where(t_idx[None, :] < lens[:, None],
+                    tables[:, t_idx // bs], nb)            # (B, S_pad)
+    off = jnp.broadcast_to(t_idx % bs, blk.shape)
+    k = pool_sub["k"].at[:, blk, off].set(
+        dense_k.astype(pool_sub["k"].dtype), mode="drop")
+    v = pool_sub["v"].at[:, blk, off].set(
+        dense_v.astype(pool_sub["v"].dtype), mode="drop")
+    return k, v
+
+
+@functools.lru_cache(maxsize=64)
+def _paged_prefill_fn(cfg: ModelConfig, cap: int, bs: int, mesh=None):
+    """Jitted paged wave prefill: dense prefill -> pool commit.
+
+    Runs the EXACT dense ragged prefill (same numerics, bit-for-bit),
+    then scatters each eligible sub-layer's K/V into the device block
+    pool through the host-built tables and swaps the sub-tree to the
+    paged {'k','v','table'} layout (table broadcast over the scanned
+    layer dim). Ineligible sub-layers (sliding window, recurrent) keep
+    their dense cache untouched. ``pool`` is the persistent device pool
+    tree {group: {sub: {'k','v'}}} for eligible subs."""
+    subs = frozenset(paged_subs(cfg))
+
+    def impl(params, batch, prompt_lens, tables, pool, adapter_ids):
+        with _wave_rules(mesh):
+            tok0, dense, pos0 = _prefill_state(params, batch, cfg, cap,
+                                               adapter_ids, prompt_lens)
+            tables = jnp.asarray(tables, jnp.int32)
+            B, maxb = tables.shape
+            lens = prompt_lens.astype(jnp.int32)
+            caches = {}
+            for g, grp in dense.items():
+                caches[g] = {}
+                for s, c in grp.items():
+                    if (g, s) in subs:
+                        k, v = _pool_commit(pool[g][s], c["k"], c["v"],
+                                            tables, lens)
+                        L = k.shape[0]
+                        caches[g][s] = {
+                            "k": k, "v": v,
+                            "table": jnp.broadcast_to(tables[None],
+                                                      (L, B, maxb))}
+                    else:
+                        caches[g][s] = c
+            return tok0, caches, pos0
+
+    return jax.jit(impl)
+
+
+@functools.lru_cache(maxsize=64)
+def _paged_refill_fn(cfg: ModelConfig, cap: int, bs: int, mesh=None):
+    """Jitted paged in-wave refill: admitted rows' K/V commit into the
+    LIVE pool through their fresh tables; table rows scatter at
+    ``row_idx``; ineligible leaves row-merge exactly like _refill_fn."""
+    subs = frozenset(paged_subs(cfg))
+
+    def impl(params, batch, prompt_lens, row_idx, tables_rows, tok, caches,
+             pos, adapter_ids):
+        with _wave_rules(mesh):
+            tok_n, dense_n, pos_n = _prefill_state(params, batch, cfg, cap,
+                                                   adapter_ids, prompt_lens)
+            tables_rows = jnp.asarray(tables_rows, jnp.int32)
+            Br, maxb = tables_rows.shape
+            lens = prompt_lens.astype(jnp.int32)
+            out = {}
+            for g, grp in caches.items():
+                out[g] = {}
+                for s, old in grp.items():
+                    if (g, s) in subs:
+                        cn = dense_n[g][s]
+                        k, v = _pool_commit(old, cn["k"], cn["v"],
+                                            tables_rows, lens)
+                        L = k.shape[0]
+                        table = old["table"].at[:, row_idx].set(
+                            jnp.broadcast_to(tables_rows[None],
+                                             (L, Br, maxb)), mode="drop")
+                        out[g][s] = {"k": k, "v": v, "table": table}
+                    else:
+                        out[g][s] = jax.tree.map(
+                            lambda o, n: o.at[:, row_idx].set(
+                                n.astype(o.dtype), mode="drop"),
+                            old, dense_n[g][s])
+            tok = tok.at[row_idx].set(tok_n, mode="drop")
+            pos = pos.at[row_idx].set(pos_n, mode="drop")
+            return tok, out, pos
+
+    return jax.jit(impl)
+
+
+@functools.lru_cache(maxsize=64)
+def _paged_suffix_fn(cfg: ModelConfig, cap: int, bs: int, mesh=None):
+    """Jitted prefix-HIT admission: prefill ONLY the private suffix.
+
+    A row whose prompt prefix matched cached blocks skips re-prefilling
+    them — its table already maps the shared blocks (acquired, never
+    written: copy-on-write), and this dispatch runs just the suffix
+    chunk through the stack (transformer.stack_chunk), scattering
+    suffix K/V into the row's private blocks and producing the row's
+    first decode token + position. Requires a fully paged stack (the
+    engine gates prefix sharing to such configs)."""
+
+    def impl(params, tokens, suffix_lens, start, row_idx, tables_rows,
+             tok, caches, pos, adapter_ids):
+        with _wave_rules(mesh):
+            adapters = params.get("adapters", {}).get("stack", {})
+            Br, W = tokens.shape
+            tables_rows = jnp.asarray(tables_rows, jnp.int32)
+            maxb = tables_rows.shape[1]
+            suffix_lens = suffix_lens.astype(jnp.int32)
+            start = start.astype(jnp.int32)
+            x = embed(params["backbone"]["embed"], tokens)
+            x = shard(x, "batch", "seq", "d_model")
+            valid = jnp.arange(W, dtype=jnp.int32)[None, :] \
+                < suffix_lens[:, None]
+            sub_caches = {
+                g: {s: {"k": c["k"], "v": c["v"],
+                        "table": jnp.broadcast_to(
+                            tables_rows[None], (c["k"].shape[0], Br, maxb))}
+                    for s, c in grp.items()}
+                for g, grp in caches.items()}
+            x, new_sub = stack_chunk(params["backbone"]["layers"], adapters,
+                                     x, sub_caches, cfg, start=start,
+                                     valid=valid, adapter_ids=adapter_ids)
+            xl = x[jnp.arange(Br)[:, None],
+                   jnp.maximum(suffix_lens - 1, 0)[:, None]]
+            xl = rmsnorm(params["backbone"]["final_norm"], xl)
+            head_tbl = params["backbone"].get("lm_head",
+                                              params["backbone"]["embed"])
+            logits = unembed(head_tbl, xl)
+            tok_n = jnp.argmax(logits[:, -1], axis=-1)[:, None] \
+                .astype(jnp.int32)
+            pos_n = start + suffix_lens
+            out = {}
+            for g, grp in caches.items():
+                out[g] = {}
+                for s, old in grp.items():
+                    ns = new_sub[g][s]
+                    table = old["table"].at[:, row_idx].set(
+                        jnp.broadcast_to(
+                            tables_rows[None],
+                            (old["k"].shape[0], Br, maxb)), mode="drop")
+                    out[g][s] = {"k": ns["k"], "v": ns["v"], "table": table}
+            tok = tok.at[row_idx].set(tok_n, mode="drop")
+            pos = pos.at[row_idx].set(pos_n, mode="drop")
+            return tok, out, pos
+
+    return jax.jit(impl)
+
+
 # Fused-fn cache-key audit (speculative decoding landing draft_k):
 # every trace-shaping argument must appear in the lru key, and ONLY
 # trace-shaping arguments (a spurious key arg would fork identical jits).
@@ -389,7 +560,17 @@ def _segment_fn(cfg: ModelConfig, steps: int, greedy: bool, mesh=None):
 #   _refill_fn(cfg, cap)                  same
 #   _segment_fn(cfg, steps, greedy)       steps is the scan length, greedy
 #                                         picks the sampling branch —
-#                                         draft_k never reaches this fn
+#                                         draft_k never reaches this fn;
+#                                         it serves paged and dense waves
+#                                         alike (jit re-specializes on the
+#                                         cache TREE STRUCTURE, so one key
+#                                         holds both entry points)
+#   _paged_prefill_fn(cfg, cap, bs)       bs fixes the pool block size
+#                                         (table arithmetic is traced);
+#                                         n_blocks/maxb are jit shapes
+#   _paged_refill_fn(cfg, cap, bs)        same
+#   _paged_suffix_fn(cfg, cap, bs)        same; suffix width W is a jit
+#                                         shape, not a key
 #   _draft_fn(dcfg, k)                    k+1 is the draft scan length
 #   _verify_fn(cfg)                       chunk width T is a jit shape —
 #                                         k is deliberately NOT in the key

@@ -139,8 +139,14 @@ def adapter_stack_spec(cfg: ModelConfig) -> dict:
     return out
 
 
-def cache_group_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
-    """Decode-cache spec mirroring the group structure."""
+def cache_group_spec(cfg: ModelConfig, batch: int, seq_len: int, *,
+                     paged=None) -> dict:
+    """Decode-cache spec mirroring the group structure.
+
+    ``paged=(n_blocks, block_size)`` switches the ELIGIBLE sub-layers
+    (full-window attention/moe — see :func:`paged_subs`) to the paged
+    block-pool layout; sliding-window and recurrent sub-layers keep
+    their dense per-row layout either way."""
     out = {}
     for name, kinds, n in groups_for(cfg):
         grp = {}
@@ -148,12 +154,27 @@ def cache_group_spec(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
             if k in ("attn", "moe"):
                 w = attn_window(cfg, k)
                 grp[f"s{i}"] = attn_mod.cache_spec(cfg, batch, seq_len,
-                                                   window=w, layers=n)
+                                                   window=w, layers=n,
+                                                   paged=paged)
             elif k == "ssm":
                 grp[f"s{i}"] = ssm_mod.ssm_cache_spec(cfg, batch, layers=n)
             elif k == "rglru":
                 grp[f"s{i}"] = rglru_mod.rglru_cache_spec(cfg, batch, layers=n)
         out[name] = grp
+    return out
+
+
+def paged_subs(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """[(group, sub_key)] of sub-layers eligible for the paged KV layout:
+    full-window (window == 0) attention/moe. Sliding-window layers keep
+    their W-slot rolling buffer (already block-sized) and recurrent
+    layers have O(1) state — a config with no eligible sub-layers still
+    serves through the paged engine mode, it just allocates no blocks."""
+    out = []
+    for name, kinds, _ in groups_for(cfg):
+        for i, k in enumerate(kinds):
+            if k in ("attn", "moe") and not attn_window(cfg, k):
+                out.append((name, f"s{i}"))
     return out
 
 
@@ -321,9 +342,54 @@ def stack_decode(params: dict, adapters: dict, x: jax.Array,
 def rec_cache_part(caches: dict) -> dict:
     """The recurrent ({'h','conv'}) sub-trees of a decode-cache tree — the
     part speculative decoding snapshots per step for rollback (attention
-    caches, which carry a 'pos' leaf, roll back by slot restore instead)."""
-    return {g: {s: c for s, c in grp.items() if "pos" not in c}
+    caches, which carry a 'pos' or 'table' leaf, roll back by slot
+    restore instead)."""
+    return {g: {s: c for s, c in grp.items()
+                if "pos" not in c and "table" not in c}
             for g, grp in caches.items()}
+
+
+def stack_chunk(params: dict, adapters: dict, x: jax.Array, caches: dict,
+                cfg: ModelConfig, *, start: jax.Array, valid: jax.Array,
+                adapter_ids=None):
+    """Length-W suffix chunk through a FULLY PAGED stack (prefix sharing).
+
+    A prefix-cache hit row re-prefills only its private suffix: x is the
+    embedded (B, W, d) suffix, row b at absolute positions
+    ``start[b]..start[b]+W-1`` with ``valid`` (B, W) masking real tokens.
+    Every sub-layer must be a full-window attention/moe layer holding a
+    paged cache (prefix sharing is gated to such configs at the engine).
+    Returns (x, new_caches)."""
+    new_caches: dict = {}
+    for name, kinds, n in groups_for(cfg):
+        gp, ga = params[name], adapters.get(name, {})
+        gc = caches[name]
+
+        def body(x, layer):
+            lp, la, lc = layer
+            new_lc = {}
+            for i, k in enumerate(kinds):
+                key = f"s{i}"
+                if k not in ("attn", "moe") or "table" not in lc[key]:
+                    raise NotImplementedError(
+                        "stack_chunk requires a fully paged attention stack")
+                p_, a_ = lp[key], la.get(key, {})
+                h, c = attn_mod.attention_chunk_paged(
+                    p_["attn"], a_, rmsnorm(p_["ln1"], x), lc[key], cfg,
+                    start=start, valid=valid, adapter_ids=adapter_ids)
+                x = x + h
+                if k == "moe":
+                    h2, _ = moe_apply(p_["moe"], rmsnorm(p_["ln2"], x), cfg)
+                else:
+                    h2 = mlp(p_["mlp"], rmsnorm(p_["ln2"], x))
+                x = x + h2
+                new_lc[key] = c
+            return x, new_lc
+
+        x, new_gc = jax.lax.scan(
+            body, x, (gp, ga if ga else _empty_like(gp, n), gc))
+        new_caches[name] = new_gc
+    return x, new_caches
 
 
 def stack_verify(params: dict, adapters: dict, x: jax.Array, caches: dict,

@@ -42,6 +42,11 @@ DEFAULT_RULES: dict[str, Any] = {
     "kv_seq": "model",                # KV caches shard their seq dim (heads
                                       # rarely divide 16); long_500k decode
                                       # overrides to ('pod','data')
+    "kv_blocks": ("pod", "data"),     # paged KV block pool: blocks over the
+                                      # batch axes (any row's table may name
+                                      # any block, so the pool cannot follow
+                                      # `batch`; block count scales with
+                                      # aggregate wave size like batch does)
     "heads": "model",
     "kv_heads": "model",
     "head_dim": None,

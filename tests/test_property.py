@@ -214,3 +214,77 @@ def test_fit_spec_always_divides(dims):
     flat = [a for e in fitted if e
             for a in ((e,) if isinstance(e, str) else e)]
     assert len(flat) == len(set(flat))           # no duplicate mesh axes
+
+
+# ---------------------------------------------------------------------------
+# Paged KV block allocator (core/paged.py)
+# ---------------------------------------------------------------------------
+
+@given(data=st.data(), n_blocks=st.integers(4, 32))
+@settings(**SETTINGS)
+def test_block_allocator_invariants(data, n_blocks):
+    """Any interleaving of alloc/acquire/free conserves the pool: free +
+    used == n_blocks always, refcounts never go negative, alloc never
+    hands out a live block twice, and the books balance (check())."""
+    from repro.core.paged import BlockAllocator
+    alloc = BlockAllocator(n_blocks, 4)
+    live: list[list[int]] = []
+    ops_n = data.draw(st.integers(1, 60))
+    for _ in range(ops_n):
+        op = data.draw(st.integers(0, 2))
+        if op == 0:
+            got = alloc.alloc(data.draw(st.integers(1, n_blocks)))
+            if got is not None:
+                # freshly allocated blocks are exclusively ours (rc == 1)
+                assert all(alloc.refcount[b] == 1 for b in got)
+                live.append(got)
+        elif op == 1 and live:
+            alloc.free(live.pop(data.draw(st.integers(0, len(live) - 1))))
+        elif op == 2 and live:
+            ids = live[data.draw(st.integers(0, len(live) - 1))]
+            bid = ids[data.draw(st.integers(0, len(ids) - 1))]
+            alloc.acquire(bid)
+            alloc.free([bid])
+        assert all(rc >= 0 for rc in alloc.refcount)
+        assert alloc.free_blocks + alloc.used_blocks == n_blocks
+        assert alloc.used_blocks == len({b for ids in live for b in ids})
+        alloc.check()
+    for ids in live:
+        alloc.free(ids)
+    assert alloc.used_blocks == 0
+    alloc.check()
+
+
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=40),
+       st.integers(1, 3))
+@settings(**SETTINGS)
+def test_block_allocator_prefix_match_is_exact(tokens, bs_pow):
+    """register + match_prefix round-trip: a registered prompt's full
+    blocks always match themselves, any extension matches the registered
+    prefix, and a first-block mismatch matches nothing."""
+    from repro.core.paged import BlockAllocator, block_hashes
+    bs = 2 ** bs_pow
+    alloc = BlockAllocator(32, bs)
+    n_full = len(tokens) // bs
+    ids = alloc.alloc(max(n_full, 1))
+    assert ids is not None
+    alloc.register(tokens, ids)
+    got_ids, got_n = alloc.match_prefix(list(tokens) + [1, 2, 3])
+    assert got_n == n_full and got_ids == ids[:n_full]
+    if n_full:
+        flipped = [tokens[0] ^ 1] + list(tokens[1:])
+        assert alloc.match_prefix(flipped)[1] == 0
+        assert len(block_hashes(tokens, bs)) == n_full
+    alloc.free(ids)
+    alloc.check()
+
+
+@given(st.integers(2, 16))
+@settings(**SETTINGS)
+def test_block_allocator_double_free_raises(n_blocks):
+    from repro.core.paged import BlockAllocator
+    alloc = BlockAllocator(n_blocks, 4)
+    ids = alloc.alloc(n_blocks // 2 or 1)
+    alloc.free(ids)
+    with pytest.raises(RuntimeError):
+        alloc.free(ids)

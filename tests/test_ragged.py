@@ -12,6 +12,15 @@ Invariants under test:
   mixes stop adding compile entries;
 - ``attention.cache_spec`` matches the cache shapes prefill actually
   builds, across window < seq_len and window > seq_len.
+- a PAGED engine drain (block-table pool, ``PagedSpec``) is
+  token-for-token identical to the dense-slab drain and to solo serving,
+  across the same layer-stack families, with the block pool conserved
+  (allocator clean after every drain);
+- cross-request prefix sharing prefills each shared block exactly once
+  (counter- and refcount-audited), both inside one drain and across
+  drains via the hash-retaining LRU free list;
+- ``serve_trace`` timed admission serves the same tokens as front-loaded
+  submission.
 """
 import dataclasses
 
@@ -22,6 +31,7 @@ import pytest
 
 from repro.configs.base import get_config
 from repro.core.adapter_bank import AdapterBank
+from repro.core.paged import BlockAllocator, PagedSpec
 from repro.launch.engine import DecodeEngine
 from repro.models import attention as attn_mod
 from repro.models import model as M
@@ -241,3 +251,198 @@ def test_cache_spec_matches_built_cache(window, seq_len):
                                is_leaf=lambda x: hasattr(x, "shape")
                                and not isinstance(x, dict))
     assert built_shapes == spec_shapes
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: block-table pool drains
+# ---------------------------------------------------------------------------
+
+def _solo(params, cfg, row, gen):
+    return np.asarray(M.generate_scan(params, cfg, jnp.asarray(row[None]),
+                                      gen=gen))[0]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_paged_drain_matches_dense(arch):
+    """A paged drain (block pool + tables, slots < requests so in-wave
+    refill hits the paged commit path) == the dense-slab drain == solo
+    serving, across the dense/ssm/hybrid stacks; the pool is conserved
+    (allocator clean once every request retires)."""
+    cfg = get_config(arch).reduced().with_(dtype="float32", vocab_size=64)
+    params = M.init(cfg, KEY)
+    rows, gens = _ragged_requests(cfg)
+
+    paged = DecodeEngine(cfg, slots=3,
+                         paged=PagedSpec(n_blocks=32, block_size=8))
+    uids_p = [paged.submit(r, g) for r, g in zip(rows, gens)]
+    comps_p, stats_p = paged.run(params)
+    assert stats_p.waves > 1                   # refill actually happened
+
+    dense = DecodeEngine(cfg, slots=3)
+    uids_d = [dense.submit(r, g) for r, g in zip(rows, gens)]
+    comps_d, _ = dense.run(params)
+
+    by_p = {c.uid: c.tokens for c in comps_p}
+    by_d = {c.uid: c.tokens for c in comps_d}
+    for (up, ud, r, g) in zip(uids_p, uids_d, rows, gens):
+        np.testing.assert_array_equal(by_p[up], by_d[ud])
+        np.testing.assert_array_equal(by_p[up], _solo(params, cfg, r, g))
+    assert stats_p.pool_block_size == 8
+    assert stats_p.pool_peak_blocks >= 1
+    assert paged._alloc.used_blocks == 0       # every row's blocks freed
+    paged._alloc.check()
+
+
+def _prefix_rows(cfg, bs, n_hits=2, prefix_blocks=2, seed=11):
+    """One donor + n_hits rows sharing `prefix_blocks` full blocks."""
+    prefix = np.asarray(jax.random.randint(
+        jax.random.fold_in(KEY, seed), (prefix_blocks * bs,), 0,
+        cfg.vocab_size, dtype=jnp.int32))
+    rows = []
+    for i in range(1 + n_hits):
+        tail = np.asarray(jax.random.randint(
+            jax.random.fold_in(KEY, seed + 1 + i), (3,), 0,
+            cfg.vocab_size, dtype=jnp.int32))
+        rows.append(np.concatenate([prefix, tail]))
+    return rows
+
+
+def test_paged_prefix_sharing_prefills_shared_blocks_once():
+    """Same-drain prefix sharing: the donor's full prefill registers its
+    prompt blocks at PLAN time, so same-wave siblings acquire the shared
+    blocks instead of allocating + re-prefilling them. Exactly-once is
+    audited through the allocator's books — shared blocks are allocated
+    once (by the donor) and acquired, never re-allocated, by the hits —
+    and every row still decodes token-identically to solo serving."""
+    cfg = get_config("qwen2-7b").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    params = M.init(cfg, KEY)
+    bs, gen = 4, 3
+    rows = _prefix_rows(cfg, bs)               # donor + 2 hits, prefix = 2 blocks
+    engine = DecodeEngine(
+        cfg, slots=4,
+        paged=PagedSpec(n_blocks=32, block_size=bs, share_prefix=True))
+    alloc = engine._alloc
+    uids = [engine.submit(r, gen) for r in rows]
+    comps, stats = engine.run(params)
+
+    assert stats.prefix_hits == 2
+    assert stats.prefix_hit_tokens == 2 * 2 * bs
+    assert alloc.shared_acquires == 2 * 2      # 2 hits x 2 prefix blocks
+    # exactly-once: total fresh allocations == naive demand minus the
+    # shared prefix blocks the hits did NOT allocate
+    naive = sum(-(-(len(r) + gen) // bs) for r in rows)
+    assert alloc.allocated == naive - 2 * 2
+    assert stats.pool_blocks_alloc == alloc.allocated
+    by_uid = {c.uid: c.tokens for c in comps}
+    for uid, r in zip(uids, rows):
+        np.testing.assert_array_equal(by_uid[uid], _solo(params, cfg, r, gen))
+    assert alloc.used_blocks == 0              # refcounts drained to zero
+    alloc.check()
+
+
+def test_paged_prefix_sharing_across_drains_and_refill():
+    """The hash-retaining LRU free list revives a retired drain's prefix
+    blocks for a LATER drain's matching prompt (no re-prefill), and
+    sharing still fires on the in-wave refill path (slots < requests)."""
+    cfg = get_config("qwen2-7b").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    params = M.init(cfg, KEY)
+    bs, gen = 4, 3
+    rows = _prefix_rows(cfg, bs)
+    engine = DecodeEngine(
+        cfg, slots=2,                          # 3 requests -> refill wave
+        paged=PagedSpec(n_blocks=32, block_size=bs, share_prefix=True))
+    uids = [engine.submit(r, gen) for r in rows]
+    comps, stats = engine.run(params)
+    assert stats.prefix_hits == 2              # refill-path admissions share
+    by_uid = {c.uid: c.tokens for c in comps}
+    for uid, r in zip(uids, rows):
+        np.testing.assert_array_equal(by_uid[uid], _solo(params, cfg, r, gen))
+
+    hits_before = engine._alloc.hash_hits
+    uid2 = engine.submit(rows[1], gen)         # same prompt, next drain
+    comps2, stats2 = engine.run(params)
+    assert stats2.prefix_hits == 1             # revived off the free list
+    assert engine._alloc.hash_hits > hits_before
+    np.testing.assert_array_equal(
+        {c.uid: c.tokens for c in comps2}[uid2],
+        _solo(params, cfg, rows[1], gen))
+    assert engine._alloc.used_blocks == 0
+    engine._alloc.check()
+
+
+def test_paged_serve_trace_matches_solo():
+    """Arrival-driven admission: a timed trace drains to the same tokens
+    as solo serving, and SLA classes land in per-class stats."""
+    cfg = get_config("qwen2-7b").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+    params = M.init(cfg, KEY)
+    rows, gens = _ragged_requests(cfg, n=3)
+    trace = [(0.00, rows[0], gens[0], {"sla": "gold"}),
+             (0.01, rows[1], gens[1], {"sla": "best_effort"}),
+             (0.02, rows[2], gens[2])]
+    engine = DecodeEngine(cfg, slots=2,
+                          paged=PagedSpec(n_blocks=32, block_size=8))
+    comps, stats = engine.serve_trace(params, trace)
+    assert stats.requests == 3
+    by_uid = {c.uid: c.tokens for c in comps}
+    for uid, (_, r, g, *_) in zip(sorted(by_uid), trace):
+        np.testing.assert_array_equal(by_uid[uid], _solo(params, cfg, r, g))
+    assert set(stats.sla_stats) == {"gold", "best_effort"}
+    assert stats.sla_stats["gold"]["requests"] == 1
+    assert stats.sla_stats["gold"]["deadline_miss"] == 0
+
+
+def test_paged_engine_rejects_invalid_configs():
+    """Fail-fast gates: paged+speculative is mutually exclusive, prefix
+    sharing needs a fully paged stack, and a request that could never
+    fit the pool is rejected at submit, not stalled at admission."""
+    cfg = get_config("qwen2-7b").reduced().with_(dtype="float32",
+                                                 vocab_size=64)
+
+    class _FakeSpec:                           # passes validate, hits the gate
+        def validate_target(self, cfg):
+            pass
+
+    with pytest.raises(ValueError, match="paged serving composes"):
+        DecodeEngine(cfg, slots=2, spec=_FakeSpec(),
+                     paged=PagedSpec(n_blocks=8, block_size=4))
+    ssm_cfg = get_config("falcon-mamba-7b").reduced().with_(
+        dtype="float32", vocab_size=64)
+    with pytest.raises(ValueError, match="fully paged stack"):
+        DecodeEngine(ssm_cfg, slots=2,
+                     paged=PagedSpec(n_blocks=8, block_size=4,
+                                     share_prefix=True))
+    engine = DecodeEngine(cfg, slots=2,
+                          paged=PagedSpec(n_blocks=4, block_size=4))
+    with pytest.raises(ValueError, match="could never be admitted"):
+        engine.submit(np.arange(15, dtype=np.int32) % 64, 8)   # needs 6 > 4
+
+
+def test_block_allocator_random_walk_conserves_pool():
+    """Seeded alloc/free/acquire walk: the pool is conserved (free + used
+    == n_blocks at every step), refcounts never go negative, double-free
+    raises, and the books always balance (allocator.check())."""
+    rng = np.random.default_rng(5)
+    alloc = BlockAllocator(24, 4)
+    live: list[list[int]] = []
+    for _ in range(400):
+        op = rng.integers(3)
+        if op == 0:                            # alloc a few blocks
+            got = alloc.alloc(int(rng.integers(1, 5)))
+            if got is not None:
+                live.append(got)
+        elif op == 1 and live:                 # free one holding
+            alloc.free(live.pop(int(rng.integers(len(live)))))
+        elif op == 2 and live:                 # share then release a block
+            bid = live[int(rng.integers(len(live)))][0]
+            alloc.acquire(bid)
+            alloc.free([bid])
+        assert all(rc >= 0 for rc in alloc.refcount)
+        assert alloc.free_blocks + alloc.used_blocks == 24
+        alloc.check()
+    ids = live.pop() if live else alloc.alloc(2)
+    alloc.free(ids)
+    with pytest.raises(RuntimeError):
+        alloc.free(ids)                        # double-free must raise
