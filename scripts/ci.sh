@@ -17,6 +17,12 @@ python -m pip install -q -r requirements-dev.txt \
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
+# tracelint gate first: pure-AST, ~2s, catches hot-path regressions
+# (cache-key drift, host syncs, wall clocks, unregistered kernels)
+# before the suite spends minutes reproducing them dynamically
+python -m repro.analysis
+echo "[ci] tracelint gate OK (R1-R6 clean against an empty baseline)"
+
 python -m pytest -x -q
 
 python - <<'PY'

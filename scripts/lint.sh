@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# tracelint: the static-analysis gate for the serving/training hot paths.
+#
+#   bash scripts/lint.sh [paths...]        # exit 1 on any new finding
+#
+# Pure-AST (no jax import), lints the whole tree in ~2s. Findings print
+# as `file:line CODE message`; suppression baseline lives at
+# scripts/lint_baseline.txt (shipped empty — see README "Static
+# analysis" for the rules R1-R6 and the `# tracelint:` grammar).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m repro.analysis "$@"

@@ -1,0 +1,44 @@
+"""tracelint: static analysis + runtime compile guards for the hot paths.
+
+The serving/training hot paths (PRs 1-9) rest on invariants that are
+invisible to the type checker and too easy to regress in review:
+
+- every ``functools.lru_cache`` fused-fn factory's key tuple must contain
+  EVERY value that shapes the traced graph (a missed key silently serves
+  one specialization for another; a spurious key forks identical jits);
+- the drain loop syncs the host exactly once per segment — a stray
+  ``.item()`` / ``np.asarray`` / ``block_until_ready`` inside a jitted or
+  scanned body (or the drain loop itself) turns a fused dispatch into a
+  per-token round trip;
+- hot-path clocks are ``time.perf_counter()`` (monotonic), never wall
+  clocks;
+- library code raises real exceptions, not bare ``assert``s;
+- every Pallas kernel keeps its ``ref.py`` oracle and its
+  xla|pallas|interpret ``ops.py`` dispatch;
+- a donated buffer is dead after the donating call.
+
+``python -m repro.analysis`` (or ``scripts/lint.sh``) machine-checks all
+of the above over ``src/repro`` + ``tests`` as rules R1-R6 and exits
+nonzero on any finding not in the checked-in baseline
+(``scripts/lint_baseline.txt``). See README "lint rules" for the rule
+table and the ``# tracelint:`` annotation/suppression syntax.
+
+The runtime half, :mod:`repro.analysis.guards`, turns ``jax.log_compiles``
+into :func:`compile_guard` — a context manager that counts XLA
+compilations (exported as telemetry counters) and raises
+:class:`CompileBudgetExceeded` past a budget, so tests can assert the
+pow2 segment bucketing really does bound compilation per drain.
+"""
+from repro.analysis.base import Finding, SourceFile
+
+__all__ = ["Finding", "SourceFile", "compile_guard", "CompileBudgetExceeded",
+           "CompileLog"]
+
+
+def __getattr__(name):
+    # guards imports jax; keep the lint CLI import-light (sub-second) by
+    # loading the runtime half only when asked for.
+    if name in ("compile_guard", "CompileBudgetExceeded", "CompileLog"):
+        from repro.analysis import guards
+        return getattr(guards, name)
+    raise AttributeError(name)

@@ -1,0 +1,133 @@
+"""R5 — the xla|pallas|interpret kernel triad contract.
+
+Every Pallas kernel module (any file under ``kernels/`` containing a
+``pallas_call``) must register its public contract with one or more
+
+    # tracelint: kernel-op=<ops.py dispatch fn> oracle=<ref.py oracle fn>
+
+annotations. R5 then verifies, cross-file:
+
+- the named dispatch exists as a module-level def in ``ops.py``, takes a
+  ``backend`` argument, and routes through the ``_pick`` backend
+  resolver (the xla|pallas|interpret triad);
+- the named oracle exists as a module-level def in ``ref.py``.
+
+A kernel that loses its oracle loses its parity tests; a dispatch that
+bypasses ``_pick`` silently drops the interpret path CI smokes rely on.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from repro.analysis.base import Finding, SourceFile
+
+
+def _module_defs(tree: ast.Module) -> dict:
+    return {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _has_backend_param(fn) -> bool:
+    a = fn.args
+    return any(p.arg == "backend"
+               for p in a.posonlyargs + a.args + a.kwonlyargs)
+
+
+def _routes_through_pick(fn) -> bool:
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Call):
+            f = n.func
+            name = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else "")
+            if name == "_pick":
+                return True
+    return False
+
+
+def _first_pallas_call_line(tree: ast.Module) -> int:
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Call):
+            f = n.func
+            name = f.attr if isinstance(f, ast.Attribute) else (
+                f.id if isinstance(f, ast.Name) else "")
+            if name == "pallas_call":
+                return n.lineno
+    return 1
+
+
+def check_kernels(kernels_dir, *, rel_root=None) -> list:
+    """Run R5 over one kernels directory. ``rel_root`` controls how
+    finding paths are rendered (repo-relative by default)."""
+    kernels_dir = Path(kernels_dir)
+    rel_root = Path(rel_root) if rel_root is not None else kernels_dir
+    out: list = []
+
+    def rel(p: Path) -> str:
+        try:
+            return p.relative_to(rel_root).as_posix()
+        except ValueError:
+            return p.as_posix()
+
+    ops_path = kernels_dir / "ops.py"
+    ref_path = kernels_dir / "ref.py"
+    ops_defs = _module_defs(ast.parse(ops_path.read_text())) \
+        if ops_path.exists() else None
+    ref_defs = _module_defs(ast.parse(ref_path.read_text())) \
+        if ref_path.exists() else None
+
+    for path in sorted(kernels_dir.glob("*.py")):
+        if path.name in ("ops.py", "ref.py", "__init__.py"):
+            continue
+        text = path.read_text()
+        if "pallas_call" not in text:
+            continue
+        sf = SourceFile(rel(path), text)
+        anns = [a for a in sf.annotations if a.kind == "kernel-op"]
+        if not anns:
+            line = _first_pallas_call_line(sf.tree)
+            if not sf.suppressed(line, "R5"):
+                out.append(Finding(
+                    sf.path, line, "R5",
+                    "pallas_call kernel module has no `tracelint: "
+                    "kernel-op=... oracle=...` registration (every "
+                    "kernel needs its ref.py oracle and ops.py "
+                    "xla|pallas|interpret dispatch)"))
+            continue
+        for ann in anns:
+            op, oracle = ann.fields["op"], ann.fields["oracle"]
+            if not oracle:
+                out.append(Finding(
+                    sf.path, ann.line, "R5",
+                    f"kernel-op={op or '?'} registration is missing its "
+                    "oracle= (ref.py parity target)"))
+            if ops_defs is None:
+                out.append(Finding(sf.path, ann.line, "R5",
+                                   "kernels/ops.py not found — no "
+                                   "dispatch layer to register against"))
+            elif op not in ops_defs:
+                out.append(Finding(
+                    sf.path, ann.line, "R5",
+                    f"registered dispatch ops.{op} does not exist"))
+            else:
+                fn = ops_defs[op]
+                if not _has_backend_param(fn):
+                    out.append(Finding(
+                        sf.path, ann.line, "R5",
+                        f"ops.{op} has no backend= parameter — the "
+                        "xla|pallas|interpret triad is not selectable"))
+                elif not _routes_through_pick(fn):
+                    out.append(Finding(
+                        sf.path, ann.line, "R5",
+                        f"ops.{op} does not route through the _pick "
+                        "backend resolver — interpret-mode CI smokes "
+                        "cannot reach this kernel"))
+            if oracle and ref_defs is None:
+                out.append(Finding(sf.path, ann.line, "R5",
+                                   "kernels/ref.py not found — no oracle "
+                                   "layer to register against"))
+            elif oracle and oracle not in ref_defs:
+                out.append(Finding(
+                    sf.path, ann.line, "R5",
+                    f"registered oracle ref.{oracle} does not exist"))
+    return out

@@ -1,0 +1,541 @@
+"""AST rule passes R1-R4 + R6 (R5 lives in kernel_contract.py).
+
+All passes are lexical: a function is "traced" when the file itself
+jits or scans it (decorated with ``jax.jit`` / ``functools.partial(
+jax.jit, ...)``, passed to ``jax.jit(f)`` or ``jax.lax.scan(f, ...)``,
+or lexically nested inside such a function). Call graphs are NOT
+followed — a helper called from a traced body must earn its own
+annotation if it needs checking. That keeps the pass O(file) and the
+findings explainable, at the cost of depth; the runtime
+``compile_guard`` covers what static lexical analysis cannot.
+"""
+from __future__ import annotations
+
+import ast
+import builtins
+
+from repro.analysis.base import SourceFile
+
+_BUILTINS = frozenset(dir(builtins))
+
+# host-sync calls flagged inside traced bodies (R2)
+_SYNC_ATTRS = ("item", "tolist", "block_until_ready")
+_NP_SYNC_FNS = ("asarray", "array", "ascontiguousarray")
+_CASTS = ("float", "int", "bool")
+
+_FN_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+# ---------------------------------------------------------------------------
+# name-binding helpers
+# ---------------------------------------------------------------------------
+
+def _targets(node: ast.AST) -> set:
+    return {n.id for n in ast.walk(node)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, (ast.Store,
+                                                              ast.Del))}
+
+
+def _params(fn) -> list:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _walk_pruned(node, *, into_defs: bool = False):
+    """Yield descendants of ``node`` without entering nested function or
+    lambda bodies (unless ``into_defs``); ``node`` itself is not yielded."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not into_defs and isinstance(n, _FN_NODES + (ast.Lambda,)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _bound_in_scope(fn) -> set:
+    """Names bound in ``fn``'s own scope: params, assignments, imports,
+    nested def/class names, loop/with/except targets, and (leniently —
+    they are really their own scopes) comprehension/walrus targets.
+    Flow-insensitive; does not descend into nested function bodies."""
+    if isinstance(fn, ast.Lambda):
+        return set(_params(fn))
+    bound = set(_params(fn))
+    for n in _walk_pruned(fn):
+        if isinstance(n, _FN_NODES + (ast.ClassDef,)):
+            bound.add(n.name)
+        elif isinstance(n, (ast.Import, ast.ImportFrom)):
+            for al in n.names:
+                bound.add((al.asname or al.name).split(".")[0])
+        elif isinstance(n, ast.Assign):
+            for t in n.targets:
+                bound.update(_targets(t))
+        elif isinstance(n, (ast.AnnAssign, ast.AugAssign)):
+            bound.update(_targets(n.target))
+        elif isinstance(n, (ast.For, ast.AsyncFor)):
+            bound.update(_targets(n.target))
+        elif isinstance(n, (ast.With, ast.AsyncWith)):
+            for it in n.items:
+                if it.optional_vars is not None:
+                    bound.update(_targets(it.optional_vars))
+        elif isinstance(n, ast.ExceptHandler) and n.name:
+            bound.add(n.name)
+        elif isinstance(n, ast.comprehension):
+            bound.update(_targets(n.target))
+        elif isinstance(n, ast.NamedExpr):
+            bound.update(_targets(n.target))
+    return bound
+
+
+def module_bindings(tree: ast.Module) -> set:
+    fake = ast.FunctionDef(
+        name="<module>", body=tree.body, decorator_list=[],
+        args=ast.arguments(posonlyargs=[], args=[], kwonlyargs=[],
+                           kw_defaults=[], defaults=[]))
+    return _bound_in_scope(fake) | {"__name__", "__file__", "__doc__",
+                                    "__package__", "__spec__"}
+
+
+# ---------------------------------------------------------------------------
+# import-alias resolution (numpy / jax spelled however the file spells them)
+# ---------------------------------------------------------------------------
+
+class Aliases:
+    def __init__(self, tree: ast.Module):
+        self.numpy: set = set()            # names bound to the numpy module
+        self.jax: set = set()
+        self.time_mod: set = set()
+        self.datetime_mod: set = set()
+        self.datetime_cls: set = set()
+        self.from_time: set = set()        # `from time import time [as t]`
+        self.device_get: set = set()       # `from jax import device_get`
+        for n in ast.walk(tree):
+            if isinstance(n, ast.Import):
+                for al in n.names:
+                    name, bind = al.name, al.asname or al.name.split(".")[0]
+                    if name == "numpy":
+                        self.numpy.add(bind)
+                    elif name == "jax":
+                        self.jax.add(bind)
+                    elif name == "time":
+                        self.time_mod.add(bind)
+                    elif name == "datetime":
+                        self.datetime_mod.add(bind)
+            elif isinstance(n, ast.ImportFrom):
+                for al in n.names:
+                    bind = al.asname or al.name
+                    if n.module == "time" and al.name == "time":
+                        self.from_time.add(bind)
+                    if n.module == "datetime" and al.name == "datetime":
+                        self.datetime_cls.add(bind)
+                    if n.module == "jax" and al.name == "device_get":
+                        self.device_get.add(bind)
+
+
+def _dotted(node) -> str:
+    """Dotted name of a Name/Attribute chain ('' otherwise)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _call_name(node: ast.Call) -> str:
+    return _dotted(node.func)
+
+
+def _is_jax_jit(name: str, al: Aliases) -> bool:
+    if not name:
+        return False
+    head, _, tail = name.partition(".")
+    return (head in al.jax and tail == "jit") or name == "jit"
+
+
+# ---------------------------------------------------------------------------
+# traced / hot scope discovery
+# ---------------------------------------------------------------------------
+
+def _is_lru_decorated(fn) -> bool:
+    for d in fn.decorator_list:
+        name = _dotted(d.func if isinstance(d, ast.Call) else d)
+        if name.split(".")[-1] in ("lru_cache", "cache"):
+            return True
+    return False
+
+
+def _is_jit_decorated(fn, al: Aliases) -> bool:
+    for d in fn.decorator_list:
+        if isinstance(d, ast.Call):
+            if _is_jax_jit(_call_name(d), al):
+                return True
+            if _call_name(d).split(".")[-1] == "partial" and d.args \
+                    and _is_jax_jit(_dotted(d.args[0]), al):
+                return True
+        elif _is_jax_jit(_dotted(d), al):
+            return True
+    return False
+
+
+def _collect_traced_roots(tree: ast.Module, al: Aliases) -> list:
+    """FunctionDef nodes the file jits or scans (lexically), in source
+    order. Each root is checked with ITS OWN params (a scan body nested
+    in a jitted impl appears twice: once via the impl subtree, once as
+    its own root with the carry params); duplicate findings are deduped
+    at the end of check_file."""
+    roots: list = []
+
+    def scan_scope(body, defs_in_scope):
+        local = dict(defs_in_scope)
+        for st in body:
+            if isinstance(st, _FN_NODES):
+                local[st.name] = st
+                if _is_jit_decorated(st, al):
+                    roots.append(st)
+                scan_scope(st.body, local)
+                continue
+            if isinstance(st, ast.ClassDef):
+                scan_scope(st.body, local)
+                continue
+            for n in _walk_pruned(st, into_defs=True):
+                if not isinstance(n, ast.Call):
+                    continue
+                name = _call_name(n)
+                is_scan = name.endswith("lax.scan") or name == "scan"
+                if (_is_jax_jit(name, al) or is_scan) and n.args:
+                    first = n.args[0]
+                    if isinstance(first, ast.Name) and first.id in local:
+                        roots.append(local[first.id])
+            # defs nested in compound statements (if/try/with/for)
+            for attr in ("body", "orelse", "finalbody"):
+                blk = getattr(st, attr, None)
+                if isinstance(blk, list):
+                    scan_scope(blk, local)
+            if isinstance(st, ast.Try):
+                for h in st.handlers:
+                    scan_scope(h.body, local)
+
+    scan_scope(tree.body, {})
+    return roots
+
+
+def _hot_roots(sf: SourceFile) -> list:
+    return [n for n in ast.walk(sf.tree)
+            if isinstance(n, _FN_NODES)
+            and sf.annotation_for(n, "hot") is not None]
+
+
+# ---------------------------------------------------------------------------
+# R2/R3 body checks
+# ---------------------------------------------------------------------------
+
+def _literalish(node) -> bool:
+    return isinstance(node, (ast.Constant, ast.UnaryOp)) or (
+        isinstance(node, ast.Call)
+        and _call_name(node) in ("len", "min", "max", "round"))
+
+
+def _branch_names(test: ast.AST) -> set:
+    """Name loads in a branch test, minus static-structure idioms:
+    ``x is None`` guards and isinstance/hasattr/len checks dispatch on
+    Python structure, not traced values."""
+    skip = set()
+    for n in ast.walk(test):
+        if isinstance(n, ast.Compare) and any(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in n.ops):
+            for sub in [n.left] + n.comparators:
+                if isinstance(sub, ast.Name):
+                    skip.add(sub.id)
+        if isinstance(n, ast.Call) and _call_name(n) in (
+                "isinstance", "hasattr", "len", "getattr"):
+            for sub in ast.walk(n):
+                if isinstance(sub, ast.Name):
+                    skip.add(sub.id)
+    names = {n.id for n in ast.walk(test)
+             if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+    return names - skip
+
+
+def _check_body(sf: SourceFile, fn, al: Aliases, *, traced: bool,
+                out: list) -> None:
+    """R2 (host syncs) + R3 (traced branching) inside one traced/hot fn.
+
+    ``traced=False`` is an annotated host hot path (the drain loop):
+    only unambiguous syncs are flagged there — ``np.asarray`` on a
+    device array is a sync, so it is flagged and the loop's deliberate
+    once-per-segment sync carries an inline ignore, while float()/int()
+    on host bookkeeping stays legal.
+    """
+    where = "jitted/scanned body" if traced else "hot path"
+    params = frozenset(_params(fn))
+
+    def emit(line, code, msg):
+        f = sf.finding(line, code, msg)
+        if f:
+            out.append(f)
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _SYNC_ATTRS and not node.args:
+                emit(node.lineno, "R2",
+                     f".{node.func.attr}() forces a host sync inside a "
+                     f"{where}")
+                continue
+            name = _call_name(node)
+            if not name:
+                continue
+            head, _, tail = name.partition(".")
+            if (head in al.jax and tail == "device_get") \
+                    or name in al.device_get:
+                emit(node.lineno, "R2",
+                     f"{name}() inside a {where} round-trips the device")
+            elif head in al.numpy and tail in _NP_SYNC_FNS:
+                emit(node.lineno, "R2",
+                     f"{name}() inside a {where} materializes on host "
+                     "(device sync)")
+            elif traced and name in _CASTS and node.args \
+                    and not _literalish(node.args[0]):
+                emit(node.lineno, "R2",
+                     f"{name}() on a possibly-traced value inside a "
+                     "jitted/scanned body forces a host sync")
+        elif traced and isinstance(node, (ast.If, ast.While, ast.IfExp)):
+            hit = sorted(_branch_names(node.test) & params)
+            if hit:
+                emit(node.lineno, "R3",
+                     f"Python branch on traced value(s) {', '.join(hit)} "
+                     "inside a jitted/scanned body — use lax.cond/"
+                     "jnp.where")
+
+
+# ---------------------------------------------------------------------------
+# R1 — fused-fn cache-key completeness
+# ---------------------------------------------------------------------------
+
+def _check_factory(sf: SourceFile, fn, mod_bound: set, al: Aliases,
+                   out: list) -> None:
+    params = _params(fn)
+    jits = any(isinstance(n, ast.Call)
+               and _is_jax_jit(_call_name(n), al)
+               for n in ast.walk(fn))
+
+    def emit(line, msg):
+        f = sf.finding(line, "R1", msg)
+        if f:
+            out.append(f)
+
+    if jits:
+        ann = sf.annotation_for(fn, "keys")
+        if ann is None:
+            emit(fn.lineno,
+                 f"lru_cache fused-fn factory {fn.name} missing its "
+                 "`tracelint: keys=` cache-key declaration")
+        else:
+            declared, actual = set(ann.fields["keys"]), set(params)
+            for k in sorted(declared - actual):
+                emit(fn.lineno,
+                     f"{fn.name}: declared cache key '{k}' is missing "
+                     "from the factory signature — the jit cache would "
+                     "serve one specialization for another")
+            for k in sorted(actual - declared):
+                emit(fn.lineno,
+                     f"{fn.name}: factory arg '{k}' is not in the "
+                     "declared `tracelint: keys=` tuple — a spurious key "
+                     "(forks identical jits) or an undeclared "
+                     "trace-shaper")
+
+    # closure-capture resolution: every name the traced body loads must
+    # resolve to the cache key (factory params/locals), module scope, or
+    # builtins — anything else shapes the trace without keying the cache.
+    factory_bound = set(params) | _bound_in_scope(fn)
+
+    def resolve(name_node, chain):
+        nm = name_node.id
+        if any(nm in scope for scope in chain):
+            return
+        if nm in factory_bound or nm in mod_bound or nm in _BUILTINS:
+            return
+        emit(name_node.lineno,
+             f"{fn.name}: traced body uses '{nm}' which resolves to "
+             "neither the factory cache key nor module scope — a "
+             "closure-captured trace-shaper outside the key")
+
+    def resolve_scope(node, chain):
+        own = _bound_in_scope(node)
+        inner = [own] + chain
+        roots = [node.body] if isinstance(node, ast.Lambda) else node.body
+        stack = list(roots) if isinstance(roots, list) else [roots]
+        while stack:
+            n = stack.pop()
+            if isinstance(n, _FN_NODES + (ast.Lambda,)):
+                resolve_scope(n, inner)
+                continue
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load):
+                resolve(n, inner)
+            stack.extend(ast.iter_child_nodes(n))
+
+    for n in _walk_pruned(fn):
+        if isinstance(n, _FN_NODES + (ast.Lambda,)):
+            resolve_scope(n, [])
+
+
+# ---------------------------------------------------------------------------
+# R6 — donation hazards
+# ---------------------------------------------------------------------------
+
+def _donating_jits(tree: ast.Module, al: Aliases) -> dict:
+    """{name: donated positional indices} for literal
+    ``f = jax.jit(..., donate_argnums=(i, ...))`` bindings. Donation
+    through non-literal argnums (config-dependent) is out of static
+    reach and left to tests."""
+    donors: dict = {}
+    for n in ast.walk(tree):
+        if not (isinstance(n, ast.Assign) and len(n.targets) == 1
+                and isinstance(n.targets[0], ast.Name)
+                and isinstance(n.value, ast.Call)
+                and _is_jax_jit(_call_name(n.value), al)):
+            continue
+        for kw in n.value.keywords:
+            if kw.arg != "donate_argnums" \
+                    or not isinstance(kw.value, (ast.Tuple, ast.Constant)):
+                continue
+            idxs = [e.value for e in ast.walk(kw.value)
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)]
+            if idxs:
+                donors[n.targets[0].id] = tuple(idxs)
+    return donors
+
+
+def _check_donation(sf: SourceFile, fn, donors: dict, out: list) -> None:
+    for call in ast.walk(fn):
+        if not (isinstance(call, ast.Call)
+                and isinstance(call.func, ast.Name)
+                and call.func.id in donors):
+            continue
+        donated = [call.args[i].id for i in donors[call.func.id]
+                   if i < len(call.args)
+                   and isinstance(call.args[i], ast.Name)]
+        if not donated:
+            continue
+        end = getattr(call, "end_lineno", call.lineno)
+        rebound_at_call = set()
+        for st in ast.walk(fn):
+            if isinstance(st, ast.Assign) and st.value is call:
+                for t in st.targets:
+                    rebound_at_call.update(_targets(t))
+        for nm in donated:
+            if nm in rebound_at_call:
+                continue
+            events = sorted(
+                (n.lineno, n.col_offset, isinstance(n.ctx, ast.Load))
+                for n in ast.walk(fn)
+                if isinstance(n, ast.Name) and n.id == nm
+                and n.lineno > end)
+            for line, _, is_load in events:
+                if not is_load:
+                    break                      # rebound before any use
+                f = sf.finding(
+                    line, "R6",
+                    f"'{nm}' was donated to {call.func.id}() on line "
+                    f"{call.lineno} and is read afterwards — donated "
+                    "buffers are dead after the call")
+                if f:
+                    out.append(f)
+                break
+
+
+# ---------------------------------------------------------------------------
+# entry
+# ---------------------------------------------------------------------------
+
+def check_file(sf: SourceFile, *, library: bool) -> list:
+    """All single-file rules. ``library=True`` for src/repro files (R4
+    bare-assert and R3 wall-clock apply only there; pytest asserts and
+    test/benchmark timers are idiomatic)."""
+    out: list = []
+    al = Aliases(sf.tree)
+    mod_bound = module_bindings(sf.tree)
+
+    # R1: module-level lru_cache factories only — a nested lru_cache is
+    # recreated per enclosing call (e.g. scheduler.mlcp_policy's DP
+    # table), so closure capture there is scoped by construction.
+    for st in sf.tree.body:
+        if isinstance(st, _FN_NODES) and _is_lru_decorated(st):
+            _check_factory(sf, st, mod_bound, al, out)
+
+    # R2/R3 over every traced scope and annotated host hot path.
+    for root in _collect_traced_roots(sf.tree, al):
+        _check_body(sf, root, al, traced=True, out=out)
+    for root in _hot_roots(sf):
+        _check_body(sf, root, al, traced=False, out=out)
+
+    # R3 wall-clock: library-wide (PR 8 standardized hot-path clocks on
+    # time.perf_counter; wall clocks step/slew and poison latency math).
+    if library:
+        for n in ast.walk(sf.tree):
+            if not isinstance(n, ast.Call):
+                continue
+            name = _call_name(n)
+            if not name:
+                continue
+            head, _, tail = name.partition(".")
+            bad = (head in al.time_mod and tail in ("time", "clock")) \
+                or name in al.from_time \
+                or (head in al.datetime_mod
+                    and tail in ("datetime.now", "datetime.utcnow")) \
+                or (head in al.datetime_cls and tail in ("now", "utcnow"))
+            if bad:
+                f = sf.finding(
+                    n.lineno, "R3",
+                    f"wall-clock {name}() — hot-path timing must use "
+                    "time.perf_counter() (monotonic); annotate "
+                    "`tracelint: ignore[R3]` where wall time is the "
+                    "point")
+                if f:
+                    out.append(f)
+
+    # R4: bare asserts in library code vanish under `python -O` and
+    # abort without an actionable error type.
+    if library:
+        for n in ast.walk(sf.tree):
+            if isinstance(n, ast.Assert):
+                f = sf.finding(
+                    n.lineno, "R4",
+                    "bare assert in library code — raise ValueError/"
+                    "RuntimeError (asserts vanish under -O)")
+                if f:
+                    out.append(f)
+
+    # R6: donation hazards against same-file literal donating jits.
+    donors = _donating_jits(sf.tree, al)
+    if donors:
+        for n in ast.walk(sf.tree):
+            if isinstance(n, _FN_NODES):
+                _check_donation(sf, n, donors, out)
+
+    # unknown tracelint directive == a typo silently disabling a rule
+    for ann in sf.annotations:
+        if ann.kind == "unknown":
+            f = sf.finding(ann.line, "R0",
+                           "unrecognized tracelint directive "
+                           f"{ann.fields['text']!r}")
+            if f:
+                out.append(f)
+
+    # overlapping traced-root walks (impl + its nested scan body) can
+    # produce byte-identical findings — dedupe, keep source order
+    seen, deduped = set(), []
+    for f in sorted(out, key=lambda f: (f.line, f.code, f.message)):
+        if (f.line, f.code, f.message) not in seen:
+            seen.add((f.line, f.code, f.message))
+            deduped.append(f)
+    return deduped

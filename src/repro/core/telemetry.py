@@ -196,7 +196,8 @@ class Telemetry:
         self.spans: List[SpanRecord] = []
         self._local = threading.local()
         self._epoch = time.perf_counter()
-        self._epoch_wall = time.time()
+        # Perfetto needs a wall-clock epoch; never used for durations.
+        self._epoch_wall = time.time()    # tracelint: ignore[R3] trace epoch
 
     # -- recording ----------------------------------------------------------
     def count(self, name: str, n: float = 1) -> None:
@@ -238,7 +239,7 @@ class Telemetry:
         self.hists.clear()
         self.spans.clear()
         self._epoch = time.perf_counter()
-        self._epoch_wall = time.time()
+        self._epoch_wall = time.time()    # tracelint: ignore[R3] trace epoch
 
     # -- reading ------------------------------------------------------------
     def hist_summary(self, name: str) -> Optional[dict]:

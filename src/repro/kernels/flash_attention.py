@@ -12,6 +12,7 @@ and sequential; scratch (acc, m, l) carries across it, out is written on the
 last kv step. GQA is expressed in the k/v index_maps (head h reads kv head
 h // group).
 """
+# tracelint: kernel-op=flash_attention oracle=attention
 from __future__ import annotations
 
 import functools

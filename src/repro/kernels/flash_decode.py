@@ -21,6 +21,8 @@ visible. ``q_pos`` may be per-row ``(B,)`` and ``kv_pos`` per-row ``(B, T)``
 so batch slots at different sequence positions (the serving engine's
 continuous-batching layout) share one kernel launch.
 """
+# tracelint: kernel-op=flash_decode oracle=decode_attention
+# tracelint: kernel-op=flash_decode_paged oracle=paged_decode_attention
 from __future__ import annotations
 
 import functools

@@ -29,6 +29,7 @@ engine tests assert). Dispatched from ops.py::lora_bgmv behind the usual
 ``xla|pallas|interpret`` switch. Block sizes follow lora_matmul.py and are
 validated in interpret mode only — revalidate on real TPU hardware.
 """
+# tracelint: kernel-op=lora_bgmv oracle=lora_bgmv
 from __future__ import annotations
 
 import functools

@@ -23,6 +23,8 @@ dy are each read from HBM exactly once. ``dx`` reuses the *forward* kernel:
 ``dx = dy W^T + s (dy B^T) A^T`` is itself a LoRA-fused matmul with
 ``(W, A, B) -> (W^T, B^T, A^T)`` (see ops.py::lora_matmul's custom VJP).
 """
+# tracelint: kernel-op=lora_matmul oracle=lora_matmul
+# tracelint: kernel-op=lora_matmul oracle=lora_matmul_bwd
 from __future__ import annotations
 
 import functools

@@ -36,7 +36,9 @@ def set_flash_blocks(bq: int, bkv: int) -> None:
 
 def set_backend(name: str) -> None:
     global _BACKEND
-    assert name in ("xla", "pallas", "interpret"), name
+    if name not in ("xla", "pallas", "interpret"):
+        raise ValueError(f"unknown kernel backend {name!r}: expected "
+                         "'xla', 'pallas', or 'interpret'")
     _BACKEND = name
 
 
@@ -368,7 +370,9 @@ _SSM_XLA_IMPL = "assoc"     # "step" (naive scan) | "assoc" (chunked parallel)
 def set_ssm_xla_impl(name: str) -> None:
     """Perf knob (EXPERIMENTS.md §Perf): XLA selective-scan algorithm."""
     global _SSM_XLA_IMPL
-    assert name in ("step", "assoc")
+    if name not in ("step", "assoc"):
+        raise ValueError(f"unknown selective-scan XLA impl {name!r}: "
+                         "expected 'step' or 'assoc'")
     _SSM_XLA_IMPL = name
 
 

@@ -7,6 +7,7 @@ traffic per token is exactly x/r/i in + h out.
 
 Grid: (B, num_channel_blocks, num_seq_chunks), chunks innermost.
 """
+# tracelint: kernel-op=rglru oracle=rglru
 from __future__ import annotations
 
 import functools
@@ -56,7 +57,9 @@ def rglru_pallas(x, r_gate, i_gate, a_param, h0=None, *, c: float = 8.0,
         h0 = jnp.zeros((B, W), jnp.float32)
     cs = min(chunk, S)
     bw = min(block_w, W)
-    assert S % cs == 0 and W % bw == 0, (S, cs, W, bw)
+    if S % cs != 0 or W % bw != 0:
+        raise ValueError(f"rglru_pallas tiling must divide the operand: "
+                         f"seq {S} % chunk {cs}, width {W} % block {bw}")
     n_chunks = S // cs
     a2 = a_param[:, None]
 

@@ -10,6 +10,7 @@ C-contraction, which is an (bd, N) x (N,) elementwise-sum kept on the VPU
 
 Grid: (B, num_channel_blocks, num_seq_chunks) — chunks innermost/sequential.
 """
+# tracelint: kernel-op=selective_scan oracle=selective_scan
 from __future__ import annotations
 
 import functools
@@ -62,7 +63,10 @@ def selective_scan_pallas(x, dt, A, Bm, C, D, h0=None, *,
         h0 = jnp.zeros((B, Di, N), jnp.float32)
     cs = min(chunk, S)
     bd = min(block_d, Di)
-    assert S % cs == 0 and Di % bd == 0, (S, cs, Di, bd)
+    if S % cs != 0 or Di % bd != 0:
+        raise ValueError(f"selective_scan_pallas tiling must divide the "
+                         f"operand: seq {S} % chunk {cs}, d_inner {Di} % "
+                         f"block {bd}")
     n_chunks, n_db = S // cs, Di // bd
     D2 = D[:, None]
 

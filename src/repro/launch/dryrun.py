@@ -80,7 +80,9 @@ def _input_sharding_tree(batch_structs, mesh, rules, *, cluster: bool):
 def _clusterize(batch_structs, n_clusters: int):
     def f(v):
         b = v.shape[0]
-        assert b % n_clusters == 0, (b, n_clusters)
+        if b % n_clusters != 0:
+            raise ValueError(f"batch {b} does not split evenly over "
+                             f"{n_clusters} clusters")
         return jax.ShapeDtypeStruct((n_clusters, b // n_clusters, *v.shape[1:]),
                                     v.dtype)
     return jax.tree.map(f, batch_structs)
@@ -217,13 +219,13 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     if (arch, shape_name) in SKIPS:
         return {"arch": arch, "shape": shape_name, "status": "skipped",
                 "reason": SKIPS[(arch, shape_name)]}
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, meta = build_lowered(arch, shape_name, multi_pod=multi_pod,
                                   rules_override=rules_override)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     mem = _memory_analysis_dict(compiled)
     ca = compiled.cost_analysis()

@@ -330,7 +330,8 @@ class DecodeEngine:
         self._uid += 1
         self._queue.append(Request(uid, tokens, int(max_new_tokens), extras,
                                    domain, deadline_s, time.perf_counter(),
-                                   bool(speculative), time.time(), sla))
+                                   bool(speculative),
+                                   time.time(), sla))    # tracelint: ignore[R3] t_submit_wall is informational
         self._telemetry().count("engine.submitted")
         return uid
 
@@ -437,6 +438,7 @@ class DecodeEngine:
             {**params, "adapters": self.bank.stacked}
 
     # -- serving ------------------------------------------------------------
+    # tracelint: hot
     def run(self, params) -> tuple[list[Completion], EngineStats]:
         """Drain the queue as ONE ragged continuous-batching wave.
 
@@ -795,8 +797,8 @@ class DecodeEngine:
                         tok, caches, dcaches, pos,
                         jnp.asarray(remaining, jnp.int32),
                         jnp.asarray(spec_rows), ids)
-                    toks = np.asarray(toks)    # device sync = segment done
-                    counts = np.asarray(counts)  # per-row committed tokens
+                    toks = np.asarray(toks)      # tracelint: ignore[R2] the ONE deliberate sync: segment done
+                    counts = np.asarray(counts)  # tracelint: ignore[R2] same fetch, already synced
                     ssp.set(drafted=int(dr), accepted=int(ac))
                 stats.drafted += int(dr)
                 stats.accepted += int(ac)
@@ -813,7 +815,7 @@ class DecodeEngine:
                         self.cfg, seg, self.greedy, self.mesh)(
                         self._wave_params(params, tenant), tok, caches, pos,
                         jnp.asarray(remaining, jnp.int32), key, ids)
-                    toks = np.asarray(toks)    # device sync = segment done
+                    toks = np.asarray(toks)    # tracelint: ignore[R2] the ONE deliberate sync: segment done
                 if key is not None:
                     self._key = key            # carried per-step splits
                 counts = np.minimum(seg, remaining)

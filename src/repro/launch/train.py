@@ -111,7 +111,7 @@ def main(argv=None):
         it = it_gen()
         loss_fn = M.lm_loss                  # accepts remat= for the scan impl
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if args.impl == "scan":
         remat = True if (args.remat and args.task == "lm") else None
         # pack the run's whole batch stream (same iterator + seed as the
@@ -139,7 +139,7 @@ def main(argv=None):
                      if jnp.ndim(v) == 1}
                 rsp.set(**m)
             print(f"[train] step {done:5d} {m} "
-                  f"({(time.time()-t0)/done:.2f}s/step)")
+                  f"({(time.perf_counter()-t0)/done:.2f}s/step)")
     else:
         step_fn = jax.jit(hfsl.make_hfsl_step(cfg, opt, loss_fn,
                                               sync_every=args.sync_every))
@@ -149,8 +149,8 @@ def main(argv=None):
                 m = {k: float(v) for k, v in metrics.items()
                      if jnp.ndim(v) == 0}
                 print(f"[train] step {i+1:5d} {m} "
-                      f"({(time.time()-t0)/(i+1):.2f}s/step)")
-    print(f"[train] done in {time.time()-t0:.1f}s; "
+                      f"({(time.perf_counter()-t0)/(i+1):.2f}s/step)")
+    print(f"[train] done in {time.perf_counter()-t0:.1f}s; "
           f"fedavg bytes/sync: {hfsl.sync_bytes(state['adapters_c'])}")
 
     if args.trace_out or args.metrics_out:

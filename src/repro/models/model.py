@@ -324,6 +324,7 @@ def _wave_rules(mesh):
     return use_rules(mesh, serving_rules() if mesh is not None else None)
 
 
+# tracelint: keys=cfg,cap,mesh
 @functools.lru_cache(maxsize=64)
 def _wave_prefill_fn(cfg: ModelConfig, cap: int, mesh=None):
     """Jitted ragged wave prefill: batch + prompt_lens -> decode state."""
@@ -336,6 +337,7 @@ def _wave_prefill_fn(cfg: ModelConfig, cap: int, mesh=None):
     return jax.jit(impl)
 
 
+# tracelint: keys=cfg,cap,mesh
 @functools.lru_cache(maxsize=64)
 def _refill_fn(cfg: ModelConfig, cap: int, mesh=None):
     """Jitted in-wave slot refill: prefill fresh rows INTO a live wave.
@@ -368,6 +370,7 @@ def _refill_fn(cfg: ModelConfig, cap: int, mesh=None):
     return jax.jit(impl)
 
 
+# tracelint: keys=cfg,steps,greedy,mesh
 @functools.lru_cache(maxsize=64)
 def _segment_fn(cfg: ModelConfig, steps: int, greedy: bool, mesh=None):
     """Jitted decode segment: ``steps`` scanned steps of a ragged wave.
@@ -413,6 +416,7 @@ def _pool_commit(pool_sub: dict, dense_k, dense_v, tables, lens):
     return k, v
 
 
+# tracelint: keys=cfg,cap,bs,mesh
 @functools.lru_cache(maxsize=64)
 def _paged_prefill_fn(cfg: ModelConfig, cap: int, bs: int, mesh=None):
     """Jitted paged wave prefill: dense prefill -> pool commit.
@@ -452,6 +456,7 @@ def _paged_prefill_fn(cfg: ModelConfig, cap: int, bs: int, mesh=None):
     return jax.jit(impl)
 
 
+# tracelint: keys=cfg,cap,bs,mesh
 @functools.lru_cache(maxsize=64)
 def _paged_refill_fn(cfg: ModelConfig, cap: int, bs: int, mesh=None):
     """Jitted paged in-wave refill: admitted rows' K/V commit into the
@@ -492,6 +497,7 @@ def _paged_refill_fn(cfg: ModelConfig, cap: int, bs: int, mesh=None):
     return jax.jit(impl)
 
 
+# tracelint: keys=cfg,cap,bs,mesh
 @functools.lru_cache(maxsize=64)
 def _paged_suffix_fn(cfg: ModelConfig, cap: int, bs: int, mesh=None):
     """Jitted prefix-HIT admission: prefill ONLY the private suffix.
@@ -552,35 +558,23 @@ def _paged_suffix_fn(cfg: ModelConfig, cap: int, bs: int, mesh=None):
     return jax.jit(impl)
 
 
-# Fused-fn cache-key audit (speculative decoding landing draft_k):
-# every trace-shaping argument must appear in the lru key, and ONLY
-# trace-shaping arguments (a spurious key arg would fork identical jits).
-#   _wave_prefill_fn(cfg, cap)            cap pads caches; prompt width is
-#                                         a jit shape, not a key
-#   _refill_fn(cfg, cap)                  same
-#   _segment_fn(cfg, steps, greedy)       steps is the scan length, greedy
-#                                         picks the sampling branch —
-#                                         draft_k never reaches this fn;
-#                                         it serves paged and dense waves
-#                                         alike (jit re-specializes on the
-#                                         cache TREE STRUCTURE, so one key
-#                                         holds both entry points)
-#   _paged_prefill_fn(cfg, cap, bs)       bs fixes the pool block size
-#                                         (table arithmetic is traced);
-#                                         n_blocks/maxb are jit shapes
-#   _paged_refill_fn(cfg, cap, bs)        same
-#   _paged_suffix_fn(cfg, cap, bs)        same; suffix width W is a jit
-#                                         shape, not a key
-#   _draft_fn(dcfg, k)                    k+1 is the draft scan length
-#   _verify_fn(cfg)                       chunk width T is a jit shape —
-#                                         k is deliberately NOT in the key
-#   _spec_segment_fn(cfg, dcfg, chunks, k)  chunks is the chunk-scan
-#                                         length, k sizes every chunk
-# (+ mesh in all of the above: it selects the sharding rule context).
+# Fused-fn cache-key invariant: every trace-shaping argument must appear
+# in the lru key, and ONLY trace-shaping arguments (a spurious key arg
+# would fork identical jits). The key tuples are machine-checked — each
+# factory carries a ``# tracelint: keys=...`` declaration that
+# repro.analysis rule R1 cross-checks against the signature AND against
+# the names its jitted impl actually closes over. Non-obvious choices:
+#   - _verify_fn deliberately excludes k: the chunk width T is a jit
+#     input shape, so verify re-specializes per width for free.
+#   - _segment_fn serves paged and dense waves through ONE key — jit
+#     re-specializes on the cache TREE STRUCTURE, not the key tuple.
+#   - Prompt/suffix widths and n_blocks/maxb are jit shapes everywhere,
+#     never keys; mesh is a key everywhere (it picks the sharding rules).
 # tests/test_spec_decode.py sweeps draft_k and asserts the caches stay
 # bounded by exactly these key tuples.
 
 
+# tracelint: keys=dcfg,k,mesh
 @functools.lru_cache(maxsize=64)
 def _draft_fn(dcfg: ModelConfig, k: int, mesh=None):
     """Jitted draft segment: k+1 scanned greedy drafter steps.
@@ -600,6 +594,7 @@ def _draft_fn(dcfg: ModelConfig, k: int, mesh=None):
     return jax.jit(impl)
 
 
+# tracelint: keys=cfg,mesh
 @functools.lru_cache(maxsize=64)
 def _verify_fn(cfg: ModelConfig, mesh=None):
     """Jitted one-pass chunk verify (see verify_step)."""
@@ -612,6 +607,7 @@ def _verify_fn(cfg: ModelConfig, mesh=None):
     return jax.jit(impl)
 
 
+# tracelint: keys=cfg,dcfg,chunks,k,mesh
 @functools.lru_cache(maxsize=64)
 def _spec_segment_fn(cfg: ModelConfig, dcfg: ModelConfig, chunks: int,
                      k: int, mesh=None):
@@ -630,6 +626,7 @@ def _spec_segment_fn(cfg: ModelConfig, dcfg: ModelConfig, chunks: int,
     return jax.jit(impl)
 
 
+# tracelint: keys=cfg,gen,greedy,mesh
 @functools.lru_cache(maxsize=64)
 def _generate_fn(cfg: ModelConfig, gen: int, greedy: bool, mesh=None):
     """Build + jit the fused prefill-and-scan generator for one config.

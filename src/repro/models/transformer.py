@@ -74,7 +74,9 @@ def sublayer_spec(cfg: ModelConfig, kind: str) -> dict:
     if kind == "moe":
         return {"ln1": rmsnorm_spec(d), "attn": attn_mod.attn_spec(cfg),
                 "ln2": rmsnorm_spec(d), "moe": moe_spec(cfg)}
-    assert kind == "attn", kind
+    if kind != "attn":
+        raise ValueError(f"unknown sublayer kind {kind!r}: expected "
+                         "'attn', 'ssm', 'rglru', or 'moe'")
     return {"ln1": rmsnorm_spec(d), "attn": attn_mod.attn_spec(cfg),
             "ln2": rmsnorm_spec(d), "mlp": mlp_spec(d, cfg.d_ff, jnp.dtype(cfg.dtype))}
 

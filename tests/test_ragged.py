@@ -9,7 +9,9 @@ Invariants under test:
 - per-row retirement makes ``padded_tokens`` (wasted slot-steps) exactly
   zero when the queue keeps every slot busy to the end;
 - the decode-segment jit cache is bounded by pow2 bucketing: new budget
-  mixes stop adding compile entries;
+  mixes stop adding compile entries, and repeat drains run entirely off
+  warm jit caches — ZERO XLA compilations, enforced by
+  ``repro.analysis.guards.compile_guard(max_compiles=0)``;
 - ``attention.cache_spec`` matches the cache shapes prefill actually
   builds, across window < seq_len and window > seq_len.
 - a PAGED engine drain (block-table pool, ``PagedSpec``) is
@@ -29,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis.guards import compile_guard
 from repro.configs.base import get_config
 from repro.core.adapter_bank import AdapterBank
 from repro.core.paged import BlockAllocator, PagedSpec
@@ -74,6 +77,16 @@ def test_ragged_drain_matches_per_request(arch):
         np.testing.assert_array_equal(by_uid[uid], want)
     assert engine.pending() == 0
     assert all(not s.active for s in engine.slot_table)
+
+    # warm-cache sentinel: the SAME workload drains again with ZERO new
+    # XLA compilations (the fused-fn lru keys + pow2 bucketing promise)
+    engine2 = DecodeEngine(cfg, slots=4)
+    uids2 = [engine2.submit(r, g) for r, g in zip(rows, gens)]
+    with compile_guard(max_compiles=0):
+        comps2, _ = engine2.run(params)
+    by2 = {c.uid: c.tokens for c in comps2}
+    for u1, u2 in zip(uids, uids2):
+        np.testing.assert_array_equal(by_uid[u1], by2[u2])
 
 
 def test_ragged_generate_scan_matches_solo():
@@ -227,8 +240,12 @@ def test_segment_jit_cache_stops_growing():
     # every segment length is a power of two <= the largest budget (7):
     # at most {1, 2, 4} new entries regardless of how budgets mix
     assert seen - before <= 3
-    drain([7, 2, 5, 6, 3, 4])                  # new mix, same pow2 envelope
-    drain([4, 4, 6, 2, 7, 5])
+    # stronger than lru-cache stability: new mixes over the same pow2
+    # envelope trigger ZERO XLA compilations of ANY program — the runtime
+    # proof that bucketing covers segments, refills, and prompt widths
+    with compile_guard(max_compiles=0):
+        drain([7, 2, 5, 6, 3, 4])              # new mix, same pow2 envelope
+        drain([4, 4, 6, 2, 7, 5])
     assert M._segment_fn.cache_info().currsize == seen
 
 
@@ -291,6 +308,18 @@ def test_paged_drain_matches_dense(arch):
     assert stats_p.pool_peak_blocks >= 1
     assert paged._alloc.used_blocks == 0       # every row's blocks freed
     paged._alloc.check()
+
+    # warm-cache sentinel: a second paged drain of the same workload is
+    # compile-free — the paged prefill/refill/suffix dispatches key and
+    # bucket exactly like the dense ones
+    paged2 = DecodeEngine(cfg, slots=3,
+                          paged=PagedSpec(n_blocks=32, block_size=8))
+    uids_p2 = [paged2.submit(r, g) for r, g in zip(rows, gens)]
+    with compile_guard(max_compiles=0):
+        comps_p2, _ = paged2.run(params)
+    by_p2 = {c.uid: c.tokens for c in comps_p2}
+    for u1, u2 in zip(uids_p, uids_p2):
+        np.testing.assert_array_equal(by_p[u1], by_p2[u2])
 
 
 def _prefix_rows(cfg, bs, n_hits=2, prefix_blocks=2, seed=11):
